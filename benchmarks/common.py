@@ -1,0 +1,40 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import dataclasses
+import sys
+from typing import Dict, List
+
+import numpy as np
+
+from repro.rms import ClusterSimulator, PAPER_APPS, SimConfig
+from repro.workload import make_workload
+
+WIDE_APPS = {k: dataclasses.replace(v, preferred=None)
+             for k, v in PAPER_APPS.items()}
+
+
+def run_sim(n_jobs: int, *, flexible: bool, scheduling: str = "sync",
+            wide: bool = False, seed: int = 7, **kw):
+    apps = WIDE_APPS if wide else None
+    jobs = make_workload(n_jobs, seed=seed, apps=apps)
+    cfg = SimConfig(num_nodes=64, flexible=flexible,
+                    scheduling=scheduling, **kw)
+    return ClusterSimulator(jobs, cfg, apps=apps).run()
+
+
+def action_stats(actions, kind: str) -> Dict[str, float]:
+    xs = [a.decide_s + a.apply_s for a in actions if a.action == kind]
+    if not xs:
+        return {"min": 0.0, "max": 0.0, "avg": 0.0, "std": 0.0, "n": 0}
+    arr = np.array(xs)
+    return {"min": float(arr.min()), "max": float(arr.max()),
+            "avg": float(arr.mean()), "std": float(arr.std()),
+            "n": len(xs)}
+
+
+def emit(rows: List[dict], header: List[str], file=None):
+    file = file or sys.stdout
+    print(",".join(header), file=file)
+    for r in rows:
+        print(",".join(str(r.get(h, "")) for h in header), file=file)

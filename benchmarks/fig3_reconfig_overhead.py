@@ -1,0 +1,75 @@
+"""Fig. 3: time to reconfigure from/to N processes (Flexible Sleep, 1 GB).
+
+Left chart (a): RMS scheduling time — measured from the real policy code
+plus the calibrated Slurm-transaction model.  Right chart (b): data-
+redistribution time from the factor-based transfer plans over per-node
+links.  Reproduces both paper observations: more participants => faster
+resize; shrinks pay extra synchronization.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import expand_plan, shrink_plan, transfer_time_s
+from repro.core.actions import Action
+from repro.rms import Cluster, ReconfigPolicy
+from repro.rms.costmodel import GiB, ReconfigCostModel
+from repro.rms.job import Job, JobState
+
+SIZES = [1, 2, 4, 8, 16, 32]
+
+
+def rows():
+    cost = ReconfigCostModel()
+    pol = ReconfigPolicy()
+    out = []
+    for p in SIZES:
+        q = p * 2
+        # measured policy latency (the in-process part of scheduling time)
+        cluster = Cluster(128)
+        job = Job(job_id=0, app="fs", submit_time=0, work=2, min_nodes=1,
+                  max_nodes=128, preferred=None, requested_nodes=p)
+        job.state = JobState.RUNNING
+        job.nodes = p
+        cluster.allocate(0, p)
+        t0 = time.perf_counter()
+        for _ in range(100):
+            pol.decide(cluster, [], job, minimum=q, maximum=q, factor=2)
+        wall_us = (time.perf_counter() - t0) / 100 * 1e6
+        sched_expand = cost.schedule_time(Action.EXPAND, q)
+        sched_shrink = cost.schedule_time(Action.SHRINK, q)
+        t_expand = transfer_time_s(expand_plan(p, q, GiB),
+                                   link_bw=cost.link_bw)
+        t_shrink = transfer_time_s(
+            shrink_plan(q, p, GiB), link_bw=cost.link_bw,
+            sync_s_per_participant=cost.shrink_sync_s)
+        out.append({"action": "expand", "from": p, "to": q,
+                    "policy_us": round(wall_us, 1),
+                    "sched_s": round(sched_expand, 4),
+                    "resize_s": round(t_expand, 4)})
+        out.append({"action": "shrink", "from": q, "to": p,
+                    "policy_us": round(wall_us, 1),
+                    "sched_s": round(sched_shrink, 4),
+                    "resize_s": round(t_shrink, 4)})
+    return out
+
+
+def main(quick: bool = False):
+    rs = rows()
+    print("# Fig3: reconfiguration scheduling + resize times (FS, 1 GiB)")
+    print("action,from,to,policy_us,sched_s,resize_s")
+    for r in rs:
+        print(f"{r['action']},{r['from']},{r['to']},{r['policy_us']},"
+              f"{r['sched_s']},{r['resize_s']}")
+    # paper claims
+    exp = {r["from"]: r["resize_s"] for r in rs if r["action"] == "expand"}
+    shr = {r["from"]: r["resize_s"] for r in rs if r["action"] == "shrink"}
+    print(f"# claim[more participants faster]: resize(1->2)={exp[1]}s "
+          f"> resize(32->64)={exp[32]}s: {exp[1] > exp[32]}")
+    print(f"# claim[shrink sync overhead]: shrink(64->32)={shr[64]}s > "
+          f"expand(32->64)={exp[32]}s: {shr[64] > exp[32]}")
+    return rs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Kernel microbenches (CPU): XLA chunked-attention path + interpret-mode
+kernel sanity timings.  Absolute numbers are CPU-only; the TPU story lives
+in the roofline report."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def timeit(fn, *args, n=5):
+    fn(*args).block_until_ready() if hasattr(fn(*args), "block_until_ready") \
+        else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main(quick: bool = False):
+    from repro.models.attention import chunked_attention
+    from repro.models.config import ModelConfig
+    print("# kernel/xla-path microbenches (CPU wall time)")
+    print("name,us_per_call,derived")
+    cfg = ModelConfig(name="bench", family="dense", num_layers=1,
+                      d_model=256, num_heads=4, num_kv_heads=2, d_ff=512,
+                      vocab_size=128, attn_chunk=128)
+    key = jax.random.PRNGKey(0)
+    b, s, h, kv, d = 1, 512, 4, 2, 64
+    q = jax.random.normal(key, (b, s, h, d), jnp.bfloat16)
+    k = jax.random.normal(key, (b, s, kv, d), jnp.bfloat16)
+    v = jax.random.normal(key, (b, s, kv, d), jnp.bfloat16)
+
+    @jax.jit
+    def xla_attn(q, k, v):
+        return chunked_attention(q, k, v, cfg, causal=True, window=None)
+    us = timeit(xla_attn, q, k, v)
+    flops = 2 * 2 * b * h * d * s * s / 2
+    print(f"chunked_attention_xla_b{b}s{s},{us:.0f},"
+          f"{flops/us*1e-3:.2f}GFLOP/s")
+
+    from repro.models.ssm import ssd_chunked
+    x = jax.random.normal(key, (1, 512, 4, 32))
+    dt = jax.nn.softplus(jax.random.normal(key, (1, 512, 4)))
+    a_log = jax.random.normal(key, (4,)) * 0.5
+    bb = jax.random.normal(key, (1, 512, 64))
+    cc = jax.random.normal(key, (1, 512, 64))
+
+    @jax.jit
+    def ssd(x, dt, bb, cc):
+        return ssd_chunked(x, dt, a_log, bb, cc, 128)[0]
+    us = timeit(ssd, x, dt, bb, cc)
+    print(f"ssd_chunked_xla_s512,{us:.0f},tokens/s={512/us*1e6:.0f}")
+
+    from repro.models.rglru import rglru_scan
+    a = jax.nn.sigmoid(jax.random.normal(key, (1, 512, 256)))
+    bvec = jax.random.normal(key, (1, 512, 256))
+
+    @jax.jit
+    def lru(a, bvec):
+        return rglru_scan(a, bvec)
+    us = timeit(lru, a, bvec)
+    print(f"rglru_assoc_scan_s512,{us:.0f},tokens/s={512/us*1e6:.0f}")
+    return True
+
+
+if __name__ == "__main__":
+    main()

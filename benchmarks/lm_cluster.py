@@ -1,0 +1,94 @@
+"""Beyond-paper: the DMR policy on a cluster of elastic LLM training jobs.
+
+The paper evaluated CG/Jacobi/N-body; the same machinery schedules modern
+LLM training: each job is an elastic data-parallel training run (one node
+= one 16-chip mesh slice), sized from the assigned architectures, with
+per-step times from the v5e roofline model and resize costs from the
+factor-based redistribution plans over ICI (params+optimizer state moved).
+
+Reports fixed vs flexible completion/waiting on a 64-slice (1024-chip)
+cluster — the large-scale scenario DESIGN.md §5 targets.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.rms import ClusterSimulator, SimConfig, lm_app_model
+from repro.rms.job import Job
+from repro.workload.feitelson import poisson_arrivals
+
+# preferred=None: LM training scales near-linearly with DP slices, so the
+# productive policy is wide optimization — shrink *only* when that starts a
+# queued job, expand when spare slices cannot serve the queue.  (With eager
+# preferred-mode shrinking the cluster loses throughput: recorded as a
+# negative ablation in EXPERIMENTS.md.)
+ARCH_JOBS = [
+    # (arch, steps, min, max, preferred)
+    ("smollm-135m", 4000, 1, 8, None),
+    ("granite-3-2b", 1500, 2, 16, None),
+    ("qwen3-4b", 1000, 2, 16, None),
+    ("recurrentgemma-9b", 600, 4, 32, None),
+    ("deepseek-moe-16b", 500, 4, 32, None),
+    ("gemma2-27b", 300, 8, 32, None),
+]
+
+
+def make_lm_apps():
+    apps = {}
+    for arch, steps, mn, mx, pref in ARCH_JOBS:
+        cfg = get_config(arch)
+        step_flops = 6.0 * cfg.active_param_count() * 4096 * 256
+        apps[f"lm:{arch}"] = lm_app_model(
+            arch, params=cfg.param_count(), step_flops=step_flops,
+            iterations=steps, min_nodes=mn, max_nodes=mx, preferred=pref)
+    return apps
+
+
+def make_jobs(n, apps, seed=11):
+    rng = np.random.default_rng(seed)
+    names = list(apps)
+    arrivals = poisson_arrivals(rng, n, scale_s=60.0)
+    jobs = []
+    for i in range(n):
+        app = apps[names[rng.integers(len(names))]]
+        jobs.append(Job(job_id=i, app=app.name, submit_time=float(arrivals[i]),
+                        work=float(app.iterations), min_nodes=app.min_nodes,
+                        max_nodes=app.max_nodes, preferred=app.preferred,
+                        factor=2, malleable=True,
+                        check_period_s=app.check_period_s,
+                        requested_nodes=app.max_nodes,
+                        data_bytes=app.data_bytes))
+    return jobs
+
+
+def main(quick: bool = False):
+    n = 30 if quick else 60
+    apps = make_lm_apps()
+    print(f"# beyond-paper: {n} elastic LLM training jobs on 64 slices "
+          f"(1024 chips)")
+    print("version,makespan_s,util_pct,wait_s,exec_s,completion_s")
+    reps = {}
+    for flexible in (False, True):
+        jobs = make_jobs(n, apps)
+        cfg = SimConfig(num_nodes=64, flexible=flexible,
+                        cost=__import__("repro.rms.costmodel",
+                                        fromlist=["ReconfigCostModel"])
+                        .ReconfigCostModel(link_bw=50e9))
+        rep = ClusterSimulator(jobs, cfg, apps=apps).run()
+        reps[flexible] = rep
+        w, e, c = rep.averages()
+        name = "flexible" if flexible else "fixed"
+        print(f"{name},{rep.makespan:.0f},{rep.utilization()[0]:.1f},"
+              f"{w:.0f},{e:.0f},{c:.0f}")
+    gain = (reps[False].makespan - reps[True].makespan) \
+        / reps[False].makespan * 100
+    resizes = [a for a in reps[True].actions if a.action != "no_action"]
+    mean_resize = np.mean([a.apply_s for a in resizes]) if resizes else 0
+    print(f"# makespan gain {gain:.1f}%; {len(resizes)} resizes, mean "
+          f"state-move {mean_resize:.2f}s (params+moments over ICI)")
+    return reps
+
+
+if __name__ == "__main__":
+    main()

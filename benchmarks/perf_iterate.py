@@ -1,0 +1,111 @@
+import os
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimb harness: compile one cell under a named variant and diff
+its roofline terms against the stored baseline artifact.
+
+  PYTHONPATH=src:. python benchmarks/perf_iterate.py \
+      --arch smollm-135m --shape train_4k --variant dp_only
+
+Variants encode the §Perf candidate changes; each writes a tagged artifact
+next to the baseline so EXPERIMENTS.md §Perf can cite both.
+"""
+import argparse     # noqa: E402
+import json         # noqa: E402
+import pathlib      # noqa: E402
+
+from repro.core.sharding import (FSDP_RULES, LONG_CONTEXT_RULES,  # noqa: E402
+                                 TP_DP_RULES)
+from repro.launch.dryrun import run_cell   # noqa: E402
+from repro.optim import AdamWConfig        # noqa: E402
+
+# batch fully sharded over BOTH axes (model axis becomes extra DP) — for
+# small archs whose attention cannot use TP.
+DP_ONLY_RULES = TP_DP_RULES.replace(
+    batch=("pod", "data", "model"), heads=(), kv_heads=(), mlp=(),
+    experts=(), vocab=(), zero1=("pod", "data", "model"))
+
+# flash-decode: KV cache sharded along *sequence* over the model axis —
+# for GQA archs whose kv_heads < model_ways the cache would otherwise be
+# replicated 16x and all-gathered every step.  q (1 token) replicates;
+# the softmax runs distributed (psum of partial max/sum).
+DECODE_SEQ_RULES = TP_DP_RULES.replace(
+    kv_seq=("model",), heads=(), kv_heads=())
+
+VARIANTS = {
+    "baseline": {},
+    "decode_seq": {"rules": DECODE_SEQ_RULES},
+    "decode_seq_bf16": {"rules": DECODE_SEQ_RULES,
+                        "cfg_overrides": {"param_dtype": "bfloat16"}},
+    "dp_only": {"rules": DP_ONLY_RULES},
+    "fsdp": {"rules": FSDP_RULES},
+    "tp_dp": {"rules": TP_DP_RULES},
+    "ce_chunk": {"cfg_overrides": {"ce_chunk": 512}},
+    "ce_chunk_1k": {"cfg_overrides": {"ce_chunk": 1024}},
+    "attn_chunk_2k": {"cfg_overrides": {"attn_chunk": 2048}},
+    "attn_chunk_512": {"cfg_overrides": {"attn_chunk": 512}},
+    "accum_2": {"accum": 2},
+    "accum_4": {"accum": 4},
+    "accum_16": {"accum": 16},
+    "no_zero1": {"opt_cfg": AdamWConfig(zero1=False)},
+    "grad_bf16": {"opt_cfg": AdamWConfig(grad_reduce_dtype="bfloat16")},
+    "remat_dots": {"cfg_overrides": {"remat": "dots"}},
+    "ssd_chunk_1k": {"cfg_overrides": {"ssd_chunk": 1024}},
+    "dp_only_ce": {"rules": DP_ONLY_RULES,
+                   "cfg_overrides": {"ce_chunk": 512}},
+    "dp_only_dots": {"rules": DP_ONLY_RULES,
+                     "cfg_overrides": {"remat": "dots"}},
+    "dp_only_dots_ce": {"rules": DP_ONLY_RULES,
+                        "cfg_overrides": {"remat": "dots",
+                                          "ce_chunk": 1024}},
+}
+
+
+def show(rec, label):
+    if rec.get("status") != "ok":
+        print(f"{label}: {rec.get('status')} {rec.get('error', '')[:200]}")
+        return None
+    rl = rec["roofline"]
+    mem = rec["memory"]
+    print(f"{label:>16s}: compute={rl['compute_s']*1e3:9.2f}ms "
+          f"memory={rl['memory_s']*1e3:9.2f}ms "
+          f"coll={rl['collective_s']*1e3:9.2f}ms "
+          f"dom={rl['dominant']:<10s} mfu={rl['mfu']:.4f} "
+          f"useful={rl['useful_ratio']:.2f} "
+          f"temp={mem['temp_size_in_bytes']/1e9:.1f}GB")
+    return rl
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="artifacts/perf")
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out)
+    base_path = pathlib.Path("artifacts/dryrun") / (
+        f"{args.arch}__{args.shape}__"
+        f"{'pod2x16x16' if args.multi_pod else 'pod16x16'}.json")
+    base = json.loads(base_path.read_text()) if base_path.exists() else None
+    if base:
+        show(base, "baseline")
+
+    spec = dict(VARIANTS[args.variant])
+    rec = run_cell(args.arch, args.shape, args.multi_pod, out,
+                   verbose=False, tag=args.variant, **spec)
+    rl = show(rec, args.variant)
+    if base and rl and base.get("status") == "ok":
+        b = base["roofline"]
+        for k in ("compute_s", "memory_s", "collective_s", "step_s"):
+            delta = (rl[k] - b[k]) / b[k] * 100 if b[k] else 0.0
+            print(f"   {k:>13s}: {b[k]*1e3:9.2f} -> {rl[k]*1e3:9.2f} ms "
+                  f"({delta:+.1f}%)")
+        print(f"   {'mfu':>13s}: {b['mfu']:.4f} -> {rl['mfu']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Roofline report: reads dry-run artifacts, prints the 40-cell table."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.configs import list_archs
+from repro.launch.shapes import SHAPES, applicable
+
+ART = pathlib.Path("artifacts/dryrun")
+
+
+def load(mesh="pod16x16"):
+    rows = []
+    for arch in list_archs():
+        for shape in SHAPES:
+            path = ART / f"{arch}__{shape}__{mesh}.json"
+            ok, why = applicable(arch, shape)
+            if not ok:
+                rows.append({"arch": arch, "shape": shape, "mesh": mesh,
+                             "status": "skipped", "reason": why})
+                continue
+            if not path.exists():
+                rows.append({"arch": arch, "shape": shape, "mesh": mesh,
+                             "status": "missing"})
+                continue
+            rows.append(json.loads(path.read_text()))
+    return rows
+
+
+def main(quick: bool = False):
+    print("# Roofline (single-pod 16x16, v5e: 197TF bf16 / 819GB/s HBM / "
+          "50GB/s link)")
+    print("arch,shape,status,compute_ms,memory_ms,collective_ms,dominant,"
+          "mfu,useful_ratio,hbm_fit,temp_gb")
+    n_ok = n_skip = n_other = 0
+    for r in load():
+        if r.get("status") == "ok":
+            rl = r["roofline"]
+            mem = r["memory"]
+            temp = mem["temp_size_in_bytes"] / 1e9
+            args = mem["argument_size_in_bytes"] / 1e9
+            fit = (temp + args) <= 16.0
+            print(f"{r['arch']},{r['shape']},ok,"
+                  f"{rl['compute_s']*1e3:.2f},{rl['memory_s']*1e3:.2f},"
+                  f"{rl['collective_s']*1e3:.2f},{rl['dominant']},"
+                  f"{rl['mfu']:.4f},{rl['useful_ratio']:.3f},"
+                  f"{fit},{temp:.2f}")
+            n_ok += 1
+        elif r.get("status") == "skipped":
+            print(f"{r['arch']},{r['shape']},skipped({r['reason'][:40]})"
+                  ",,,,,,,,")
+            n_skip += 1
+        else:
+            print(f"{r['arch']},{r['shape']},{r.get('status')},,,,,,,,")
+            n_other += 1
+    print(f"# {n_ok} ok, {n_skip} skipped, {n_other} missing/error")
+    # multi-pod pass/fail summary
+    multi = [r for r in load("pod2x16x16")]
+    ok2 = sum(1 for r in multi if r.get("status") == "ok")
+    sk2 = sum(1 for r in multi if r.get("status") == "skipped")
+    print(f"# multi-pod (2x16x16): {ok2} ok, {sk2} skipped, "
+          f"{len(multi)-ok2-sk2} missing/error")
+    return n_other
+
+
+if __name__ == "__main__":
+    main()

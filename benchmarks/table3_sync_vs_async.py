@@ -1,0 +1,50 @@
+"""Table 3: cluster + per-job measures, sync vs async (async dismissal)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import run_sim
+
+
+def gains(base, rep):
+    bm, fm = base.job_metrics(), rep.job_metrics()
+    out = []
+    for jid in bm:
+        if jid not in fm:
+            continue
+        b, f = bm[jid], fm[jid]
+        out.append([(b[i] - f[i]) / b[i] * 100 if b[i] else 0.0
+                    for i in range(3)])
+    return np.array(out)
+
+
+def main(quick: bool = False):
+    n = 100 if quick else 400
+    print(f"# Table 3: cluster and job measures of the {n}-job workloads "
+          f"(wide-opt mode)")
+    print("measure,fixed,sync,async")
+    base = run_sim(n, flexible=False, wide=True)
+    sync = run_sim(n, flexible=True, scheduling="sync", wide=True)
+    asyn = run_sim(n, flexible=True, scheduling="async", wide=True)
+    u = {k: r.utilization() for k, r in
+         (("fixed", base), ("sync", sync), ("async", asyn))}
+    print(f"utilization_avg_pct,{u['fixed'][0]:.2f},{u['sync'][0]:.2f},"
+          f"{u['async'][0]:.2f}")
+    print(f"utilization_std_pct,{u['fixed'][1]:.2f},{u['sync'][1]:.2f},"
+          f"{u['async'][1]:.2f}")
+    gs, ga = gains(base, sync), gains(base, asyn)
+    for i, name in enumerate(("waiting", "execution", "completion")):
+        print(f"{name}_gain_avg_pct,-,{gs[:, i].mean():.2f},"
+              f"{ga[:, i].mean():.2f}")
+        print(f"{name}_gain_std_pct,-,{gs[:, i].std():.2f},"
+              f"{ga[:, i].std():.2f}")
+    print(f"# claim[sync utilization steadier]: std sync="
+          f"{u['sync'][1]:.1f} < std async={u['async'][1]:.1f}: "
+          f"{u['sync'][1] < u['async'][1]}")
+    to = sum(1 for a in asyn.actions if a.timed_out)
+    print(f"# claim[async pathological]: {to} expand timeouts vs 0 in sync")
+    return {"fixed": base, "sync": sync, "async": asyn}
+
+
+if __name__ == "__main__":
+    main()

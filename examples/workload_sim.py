@@ -1,0 +1,61 @@
+"""The paper's end-to-end scenario: process an adaptive workload.
+
+Runs the same randomly-sorted CG/Jacobi/N-body workload through the RMS
+twice — fixed vs flexible (malleable) — and reports the paper's headline
+measures (Table 4 / Figs. 4-6).
+
+  PYTHONPATH=src python examples/workload_sim.py [--jobs 50] [--async]
+"""
+import argparse
+
+from repro.rms import ClusterSimulator, SimConfig
+from repro.workload import make_workload
+
+
+def bar(frac, width=40):
+    return "#" * int(frac * width)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=50)
+    ap.add_argument("--nodes", type=int, default=64)
+    ap.add_argument("--async", dest="async_", action="store_true")
+    args = ap.parse_args()
+    sched = "async" if args.async_ else "sync"
+
+    results = {}
+    for flexible in (False, True):
+        jobs = make_workload(args.jobs, seed=7)
+        rep = ClusterSimulator(
+            jobs, SimConfig(num_nodes=args.nodes, flexible=flexible,
+                            scheduling=sched)).run()
+        results[flexible] = rep
+        name = "flexible" if flexible else "fixed"
+        w, e, c = rep.averages()
+        u, us = rep.utilization()
+        print(f"\n== {name} workload ({args.jobs} jobs, {args.nodes} nodes,"
+              f" {sched}) ==")
+        print(f"  makespan          {rep.makespan:10.0f} s")
+        print(f"  utilization       {u:7.1f} +- {us:.1f} %")
+        print(f"  avg waiting       {w:10.1f} s")
+        print(f"  avg execution     {e:10.1f} s")
+        print(f"  avg completion    {c:10.1f} s")
+        print(f"  reconfigurations  {len([a for a in rep.actions if a.action != 'no_action']):6d}")
+    base, flex = results[False], results[True]
+    gain = (base.makespan - flex.makespan) / base.makespan * 100
+    print(f"\nworkload completes {gain:.1f}% earlier with malleability")
+    print("\nallocated nodes over time (fixed | flexible):")
+    import numpy as np
+    t_end = max(base.makespan, flex.makespan)
+    for t in np.linspace(0, t_end, 18):
+        row = []
+        for rep in (base, flex):
+            ts = [x[0] for x in rep.timeline]
+            i = max(0, np.searchsorted(ts, t, "right") - 1)
+            row.append(rep.timeline[i][1] / args.nodes)
+        print(f"  t={t:7.0f}s |{bar(row[0]):<40s}|{bar(row[1]):<40s}|")
+
+
+if __name__ == "__main__":
+    main()

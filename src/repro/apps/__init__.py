@@ -1,0 +1,8 @@
+"""The paper's evaluation applications (CG, Jacobi, N-body, FlexibleSleep)."""
+from repro.apps.paper_apps import (APPS, CGState, FlexibleSleep, calibrate,
+                                   cg_init, cg_step, jacobi_init, jacobi_step,
+                                   laplacian_matvec, nbody_init, nbody_step)
+
+__all__ = ["APPS", "CGState", "FlexibleSleep", "calibrate", "cg_init",
+           "cg_step", "jacobi_init", "jacobi_step", "laplacian_matvec",
+           "nbody_init", "nbody_step"]

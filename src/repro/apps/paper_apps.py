@@ -1,0 +1,149 @@
+"""The paper's evaluation applications, implemented in JAX (§7).
+
+CG (conjugate gradient on a 2D Laplacian), Jacobi (5-point stencil), N-body
+(all-pairs gravity) and Flexible Sleep (the synthetic overhead probe).  Each
+is an iterative kernel whose state is a flat pytree shardable over the
+``data`` axis — i.e. each is a *malleable job*: the DMR runtime can resize
+it and reshard its state exactly like an LM TrainState.
+
+``calibrate()`` measures per-iteration wall time; the DES cost models in
+:mod:`repro.rms.costmodel` are anchored to these measurements (scaled by
+problem size) rather than invented constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# -- Conjugate Gradient (2D Laplacian, matrix-free) ---------------------------
+
+
+def laplacian_matvec(x):
+    """5-point stencil matvec on an (N, N) grid with zero boundaries."""
+    up = jnp.pad(x[:-1, :], ((1, 0), (0, 0)))
+    dn = jnp.pad(x[1:, :], ((0, 1), (0, 0)))
+    lf = jnp.pad(x[:, :-1], ((0, 0), (1, 0)))
+    rt = jnp.pad(x[:, 1:], ((0, 0), (0, 1)))
+    return 4.0 * x - up - dn - lf - rt
+
+
+@dataclasses.dataclass
+class CGState:
+    x: jax.Array
+    r: jax.Array
+    p: jax.Array
+    rs: jax.Array
+
+
+def cg_init(n: int, key=None) -> CGState:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    b = jax.random.normal(key, (n, n), jnp.float32)
+    x = jnp.zeros((n, n), jnp.float32)
+    r = b - laplacian_matvec(x)
+    return CGState(x=x, r=r, p=r, rs=jnp.vdot(r, r))
+
+
+@jax.jit
+def cg_step(s: CGState) -> CGState:
+    ap = laplacian_matvec(s.p)
+    alpha = s.rs / jnp.vdot(s.p, ap)
+    x = s.x + alpha * s.p
+    r = s.r - alpha * ap
+    rs_new = jnp.vdot(r, r)
+    p = r + (rs_new / s.rs) * s.p
+    return CGState(x=x, r=r, p=p, rs=rs_new)
+
+
+jax.tree_util.register_pytree_node(
+    CGState, lambda s: ((s.x, s.r, s.p, s.rs), None),
+    lambda _, c: CGState(*c))
+
+
+# -- Jacobi (5-point stencil relaxation) ----------------------------------------
+
+
+def jacobi_init(n: int, key=None):
+    key = key if key is not None else jax.random.PRNGKey(1)
+    grid = jax.random.normal(key, (n, n), jnp.float32)
+    rhs = jax.random.normal(jax.random.fold_in(key, 1), (n, n), jnp.float32)
+    return {"grid": grid, "rhs": rhs}
+
+
+@jax.jit
+def jacobi_step(s):
+    g = s["grid"]
+    up = jnp.pad(g[:-1, :], ((1, 0), (0, 0)))
+    dn = jnp.pad(g[1:, :], ((0, 1), (0, 0)))
+    lf = jnp.pad(g[:, :-1], ((0, 0), (1, 0)))
+    rt = jnp.pad(g[:, 1:], ((0, 0), (0, 1)))
+    return {"grid": 0.25 * (up + dn + lf + rt + s["rhs"]), "rhs": s["rhs"]}
+
+
+# -- N-body (all-pairs gravity) ---------------------------------------------------
+
+
+def nbody_init(n: int, key=None):
+    key = key if key is not None else jax.random.PRNGKey(2)
+    ks = jax.random.split(key, 3)
+    return {"pos": jax.random.normal(ks[0], (n, 3), jnp.float32),
+            "vel": jax.random.normal(ks[1], (n, 3), jnp.float32) * 0.01,
+            "mass": jax.nn.softplus(jax.random.normal(ks[2], (n,
+                                                              ))) + 0.1}
+
+
+@jax.jit
+def nbody_step(s, dt: float = 0.01, eps: float = 1e-2):
+    d = s["pos"][None, :, :] - s["pos"][:, None, :]          # (N,N,3)
+    r2 = jnp.sum(d * d, axis=-1) + eps
+    inv_r3 = jnp.where(r2 > eps, r2 ** -1.5, 0.0)
+    acc = jnp.einsum("ijk,ij,j->ik", d, inv_r3, s["mass"])
+    vel = s["vel"] + dt * acc
+    return {"pos": s["pos"] + dt * vel, "vel": vel, "mass": s["mass"]}
+
+
+# -- Flexible Sleep (the synthetic overhead probe, §7.3) --------------------------
+
+
+@dataclasses.dataclass
+class FlexibleSleep:
+    """Holds ``nbytes`` of state and 'computes' by sleeping — isolating the
+    framework's reconfiguration cost from application compute (Fig. 3)."""
+
+    nbytes: int = 1 << 30
+    step_s: float = 1.0
+
+    def init(self):
+        n = self.nbytes // 4
+        return {"data": jnp.zeros((n,), jnp.float32)}
+
+    def step(self, state):
+        time.sleep(self.step_s)
+        return state
+
+
+APPS = {
+    "cg": (cg_init, cg_step),
+    "jacobi": (jacobi_init, jacobi_step),
+    "nbody": (nbody_init, nbody_step),
+}
+
+
+def calibrate(app: str, n: int, iters: int = 10) -> Tuple[float, float]:
+    """Measured per-iteration seconds (mean, std) on this host."""
+    init, step = APPS[app]
+    s = init(n)
+    s = step(s)
+    jax.block_until_ready(jax.tree.leaves(s)[0])
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        s = step(s)
+        jax.block_until_ready(jax.tree.leaves(s)[0])
+        times.append(time.perf_counter() - t0)
+    import numpy as np
+    return float(np.mean(times)), float(np.std(times))

@@ -1,0 +1,4 @@
+"""Checkpointing (atomic, compressed, elastic-restorable)."""
+from repro.checkpoint.store import CheckpointStore
+
+__all__ = ["CheckpointStore"]

@@ -1,0 +1,73 @@
+"""Mesh construction & elastic resizing helpers.
+
+A *job allocation* in this framework is a set of data-parallel slices: the
+mesh is ``(data, model)`` (optionally ``(pod, data, model)``) and malleability
+resizes the ``data`` (and ``pod``) extent while ``model`` — tensor
+parallelism inside a slice — stays fixed, mirroring the paper's model of a
+fixed number of cores per node and a variable number of nodes per job.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_mesh(data: int, model: int, pod: int = 1,
+              devices=None) -> Mesh:
+    """Build a mesh of ``pod*data*model`` devices.
+
+    Uses the first ``pod*data*model`` entries of ``devices`` (defaults to
+    ``jax.devices()``), so that meshes of different ``data`` extents share a
+    device prefix — the elastic resize path relies on this nesting to reuse
+    the original devices (the paper reuses the original nodes on expansion,
+    §5.2.1).
+    """
+    if devices is None:
+        devices = jax.devices()
+    n = pod * data * model
+    if len(devices) < n:
+        raise ValueError(f"need {n} devices, have {len(devices)}")
+    arr = np.asarray(devices[:n], dtype=object)
+    if pod > 1:
+        return Mesh(arr.reshape(pod, data, model), ("pod", "data", "model"))
+    return Mesh(arr.reshape(data, model), ("data", "model"))
+
+
+def mesh_num_slices(mesh: Mesh) -> int:
+    """Number of data-parallel slices (the malleable resource count)."""
+    n = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.shape:
+            n *= mesh.shape[ax]
+    return n
+
+
+def mesh_model_ways(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def resized_mesh(mesh: Mesh, new_slices: int, devices=None) -> Mesh:
+    """Return a mesh with ``new_slices`` data-parallel slices.
+
+    Expansion appends fresh devices after the current ones (original devices
+    are reused, as in the paper's resizer-job protocol); shrinking keeps the
+    leading prefix (the surviving slices of the sender/receiver fold).
+    Multi-pod meshes keep the pod axis as long as ``new_slices`` divides by
+    the pod count; otherwise they collapse to a single-pod mesh.
+    """
+    model = mesh_model_ways(mesh)
+    pods = mesh.shape.get("pod", 1)
+    if devices is None:
+        devices = jax.devices()
+    if pods > 1 and new_slices % pods == 0:
+        return make_mesh(new_slices // pods, model, pod=pods, devices=devices)
+    return make_mesh(new_slices, model, devices=devices)
+
+
+def slice_of_rank(mesh: Mesh, device) -> int:
+    """Index of the data-parallel slice a device belongs to."""
+    ids = list(mesh.devices.flat)
+    idx = ids.index(device)
+    return idx // mesh_model_ways(mesh)

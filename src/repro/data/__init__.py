@@ -1,0 +1,5 @@
+"""Data pipeline."""
+from repro.data.pipeline import (DataConfig, SyntheticLMData, batch_specs,
+                                 make_batch)
+
+__all__ = ["DataConfig", "SyntheticLMData", "batch_specs", "make_batch"]

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the workload's compute hot-spots.
+
+flash_attention -- causal / sliding-window / softcap / GQA attention
+ssd             -- Mamba-2 state-space-duality chunked scan
+rglru           -- RG-LRU gated linear recurrence
+
+Each has kernel.py (pl.pallas_call + BlockSpec), ops.py (jitted wrapper
+with CPU interpret fallback), ref.py (pure-jnp oracle used by the tests).
+"""

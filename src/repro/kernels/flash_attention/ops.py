@@ -1,0 +1,38 @@
+"""Jitted wrapper for the flash-attention kernel.
+
+On TPU this dispatches to the Pallas kernel; on CPU (this container) it runs
+the kernel body in interpret mode — same code path, Python-executed — which
+is how the shape/dtype sweeps in tests validate it against ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "block_q", "block_k", "impl"))
+def flash_attention_op(q, k, v, *, causal: bool = True,
+                       window: Optional[int] = None,
+                       softcap: Optional[float] = None,
+                       block_q: int = 256, block_k: int = 256,
+                       impl: str = "auto") -> jax.Array:
+    """q: (B, H, Sq, D); k/v: (B, KV, Sk, D) -> (B, H, Sq, D)."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "interpret"
+    if impl == "ref":
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap)
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           softcap=softcap, block_q=block_q,
+                           block_k=block_k,
+                           interpret=(impl == "interpret"))

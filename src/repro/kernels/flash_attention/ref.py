@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for flash attention (naive materialized softmax)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None,
+                  softcap: Optional[float] = None) -> jax.Array:
+    """q: (B, H, Sq, D); k/v: (B, KV, Sk, D). GQA via H % KV == 0.
+
+    Materializes the full (Sq, Sk) score matrix — the correctness oracle the
+    Pallas kernel is validated against (kernel sweeps call assert_allclose
+    on this).
+    """
+    b, h, sq, d = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, sq, d)
+    logits = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)   # right-aligned positions
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, sq, d).astype(q.dtype)

@@ -1,0 +1,20 @@
+"""Jitted wrapper for the RG-LRU kernel (TPU: pallas; CPU: interpret)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rglru.kernel import rglru_scan_pallas
+from repro.kernels.rglru.ref import rglru_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_w", "impl"))
+def rglru_op(a, b, *, chunk: int = 256, block_w: int = 512,
+             impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    if impl == "ref":
+        return rglru_ref(a, b)
+    return rglru_scan_pallas(a, b, chunk=chunk, block_w=block_w,
+                             interpret=(impl == "interpret"))

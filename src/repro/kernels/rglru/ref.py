@@ -1,0 +1,21 @@
+"""Oracle for the RG-LRU kernel: naive sequential recurrence."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rglru_ref(a, b, h0=None):
+    """h_t = a_t * h_{t-1} + b_t, step by step in fp32.
+
+    a, b: (B, S, W); h0: (B, W) or None. Returns h: (B, S, W).
+    """
+    bsz, s, w = a.shape
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    h = jnp.zeros((bsz, w), jnp.float32) if h0 is None else \
+        h0.astype(jnp.float32)
+    hs = []
+    for t in range(s):
+        h = af[:, t] * h + bf[:, t]
+        hs.append(h)
+    return jnp.stack(hs, axis=1).astype(a.dtype)

@@ -1,0 +1,19 @@
+"""Jitted wrapper for the SSD kernel (TPU: pallas; CPU: interpret)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd.kernel import ssd_scan
+from repro.kernels.ssd.ref import ssd_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd_op(x, dt, a_log, b, c, *, chunk: int = 128, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    if impl == "ref":
+        return ssd_ref(x, dt, a_log, b, c)
+    return ssd_scan(x, dt, a_log, b, c, chunk=chunk,
+                    interpret=(impl == "interpret"))

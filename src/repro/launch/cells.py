@@ -1,0 +1,354 @@
+"""Cell builder: (arch x shape x mesh) -> lowerable jitted program.
+
+A *cell* is one entry of the dry-run matrix.  ``build_cell`` returns the
+jitted step function (train_step / prefill_step / serve_step), its abstract
+arguments (ShapeDtypeStruct stand-ins — no allocation), and the in/out
+shardings resolved from the logical-axis rules.  The same builder backs the
+dry-run, the roofline report and the perf hillclimb, so an optimization
+changes every consumer at once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.sharding import (LONG_CONTEXT_RULES, TP_DP_RULES,
+                                 ShardingRules, activation_rules)
+from repro.models import build_model, get_model
+from repro.models.layers import abstract_params, is_spec, logical_tree
+from repro.optim import AdamWConfig, apply_updates, init_state, state_logical
+from repro.launch.shapes import SHAPES, ShapeSpec, applicable
+
+
+@dataclasses.dataclass
+class LoopSpec:
+    """A scanned loop whose body XLA's cost_analysis counts only once.
+
+    The dry-run compiles ``fn`` separately and extrapolates:
+    corrected = full + (trips - 1) * unit.  ``use`` selects which terms the
+    unit corrects ("flops" for flops+bytes, "coll" for collective bytes —
+    train cells use a grad-wrt-x-only unit for collectives so the stacked
+    param-grad all-reduce, already fully counted in the main HLO, is not
+    double-counted).
+    """
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    trips: int
+    use: Tuple[str, ...] = ("flops", "coll")
+    out_shardings: Any = None
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate: Tuple[int, ...]
+    model_flops: float
+    tokens: int
+    loops: Tuple[LoopSpec, ...] = ()
+    note: str = ""
+
+
+def _shapes_of(specs):
+    return jax.tree.map(lambda s: s.shape, specs, is_leaf=is_spec)
+
+
+def _sharding_tree(logical, shapes, mesh, rules):
+    return jax.tree.map(
+        lambda lg, sh: NamedSharding(mesh, rules.spec_for(lg, sh, mesh)),
+        logical, shapes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def with_act_rules(fn, mesh, rules):
+    """Run ``fn``'s trace under the activation-constraint context."""
+    def wrapped(*args):
+        with activation_rules(mesh, rules):
+            return fn(*args)
+    return wrapped
+
+
+def _batch_abstract(cfg, shape: ShapeSpec):
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        text = s // 2
+        return {"tokens": jax.ShapeDtypeStruct((b, text), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((b, text), jnp.int32),
+                "frontend": jax.ShapeDtypeStruct((b, s - text, cfg.d_model),
+                                                 jnp.float32)}
+    out = {}
+    text = s - cfg.frontend_tokens
+    out["tokens"] = jax.ShapeDtypeStruct((b, text), jnp.int32)
+    out["labels"] = jax.ShapeDtypeStruct((b, text), jnp.int32)
+    if cfg.frontend:
+        out["frontend"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_tokens, cfg.d_model), jnp.float32)
+    return out
+
+
+def _batch_logical(cfg):
+    out = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    if cfg.family == "encdec" or cfg.frontend:
+        out["frontend"] = ("batch", "seq", "embed")
+    return out
+
+
+def _train_state(model, mesh, rules, zero1=True):
+    specs = model.specs()
+    params_abs = abstract_params(specs, jnp.float32)
+    params_logical = model.logical()
+    params_shapes = _shapes_of(specs)
+    state_abs = {
+        "params": params_abs,
+        "opt": {"mu": params_abs, "nu": params_abs,
+                "step": jax.ShapeDtypeStruct((), jnp.int32)},
+        "rng": jax.ShapeDtypeStruct((2,), jnp.uint32),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    logical = {
+        "params": params_logical,
+        "opt": state_logical(params_logical, params_shapes, mesh, rules,
+                             zero1=zero1),
+        "rng": (None,),
+        "step": (),
+    }
+    shapes = {
+        "params": params_shapes,
+        "opt": {"mu": params_shapes, "nu": params_shapes, "step": ()},
+        "rng": (2,),
+        "step": (),
+    }
+    shardings = _sharding_tree(logical, shapes, mesh, rules)
+    return state_abs, shardings
+
+
+def _cache_state(model, cfg, batch, max_len, mesh, rules):
+    cspecs = model.cache_specs(batch, max_len)
+    logical = logical_tree(cspecs)
+    shapes = _shapes_of(cspecs)
+
+    def abs_of(spec):
+        last = spec.logical[-1] if spec.logical else ""
+        if last == "kv_seq":           # ring-buffer position index
+            dt = jnp.int32
+        elif last == "state":          # fp32 recurrent state
+            dt = jnp.float32
+        else:
+            dt = jnp.dtype(cfg.dtype)
+        return jax.ShapeDtypeStruct(spec.shape, dt)
+
+    cache_abs = jax.tree.map(abs_of, cspecs, is_leaf=is_spec)
+    shardings = _sharding_tree(logical, shapes, mesh, rules)
+    return cache_abs, shardings
+
+
+def rules_for(shape: ShapeSpec, mesh: Mesh,
+              base: ShardingRules = TP_DP_RULES) -> ShardingRules:
+    data_ways = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.shape:
+            data_ways *= mesh.shape[ax]
+    if shape.global_batch < data_ways:
+        return LONG_CONTEXT_RULES
+    return base
+
+
+# -- per-cell deployment configuration ----------------------------------------
+#
+# Chunk sizes trade HLO op count / VMEM tile size against sequence length;
+# grad-accumulation bounds the live activation footprint (scan carries) per
+# device.  These are the *deployment defaults* a production config would
+# ship; §Perf in EXPERIMENTS.md hillclimbs them per cell.
+
+TRAIN_ACCUM = {
+    "smollm-135m": 1, "granite-3-2b": 4, "qwen3-4b": 8, "gemma2-27b": 8,
+    "recurrentgemma-9b": 4, "deepseek-moe-16b": 4,
+    "phi3.5-moe-42b-a6.6b": 8, "seamless-m4t-medium": 1,
+    "mamba2-130m": 2, "paligemma-3b": 4,
+}
+
+# Train cells whose fp32 params+grads exceed ~1/3 of HBM under pure TP get
+# FSDP (weights sharded over `data` on their embed dim, gathered at use).
+FSDP_BYTES_THRESHOLD = 6e9
+
+
+def cell_config(cfg, shape: ShapeSpec):
+    """Deployment-config overrides for one cell."""
+    updates = {}
+    if shape.seq_len >= 32_768 and shape.kind != "decode":
+        updates["attn_chunk"] = 1024
+        if cfg.family == "ssm":
+            updates["ssd_chunk"] = 512
+    return dataclasses.replace(cfg, **updates) if updates else cfg
+
+
+def train_rules(cfg, mesh: Mesh) -> ShardingRules:
+    from repro.core.sharding import FSDP_RULES
+    model_ways = mesh.shape.get("model", 1)
+    per_dev = cfg.param_count() * 4 * 2 / model_ways   # params + grads fp32
+    return FSDP_RULES if per_dev > FSDP_BYTES_THRESHOLD else TP_DP_RULES
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               rules: Optional[ShardingRules] = None,
+               opt_cfg: AdamWConfig = AdamWConfig(),
+               cfg_overrides: Optional[dict] = None,
+               accum: Optional[int] = None) -> Cell:
+    ok, why = applicable(arch, shape_name)
+    if not ok:
+        raise ValueError(f"{arch} x {shape_name} skipped: {why}")
+    shape = SHAPES[shape_name]
+    _, cfg = get_model(arch)
+    cfg = cell_config(cfg, shape)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    model = build_model(cfg)
+    n_active = cfg.active_param_count()
+
+    if shape.kind == "train":
+        if rules is None:
+            rules = train_rules(cfg, mesh)
+        if accum is None:
+            accum = TRAIN_ACCUM.get(cfg.name, 1)
+        state_abs, state_sh = _train_state(model, mesh, rules,
+                                           zero1=opt_cfg.zero1)
+        batch_abs = _batch_abstract(cfg, shape)
+        batch_sh = _sharding_tree(
+            _batch_logical(cfg),
+            jax.tree.map(lambda s: s.shape, batch_abs), mesh, rules)
+
+        def grads_of(params, batch):
+            def loss_fn(p):
+                loss, parts = model.loss(p, batch)
+                return loss, parts
+            return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+        params_sh_tree = state_sh["params"]
+
+        def train_step(state, batch):
+            if accum > 1:
+                # microbatch scan bounds live activations to 1/accum;
+                # the accumulator carry is pinned to the params' sharding so
+                # each microbatch's grads reduce-scatter (ZeRO flow) instead
+                # of all-reducing a replicated buffer.
+                mbs = jax.tree.map(
+                    lambda x: x.reshape((accum, x.shape[0] // accum)
+                                        + x.shape[1:]), batch)
+
+                def micro(carry, mb):
+                    g_acc, l_acc = carry
+                    (loss, _), grads = grads_of(state["params"], mb)
+                    if opt_cfg.grad_reduce_dtype:
+                        # reduce across slices in low precision; accumulate
+                        # in fp32 (error stays below bf16 rounding of one
+                        # microbatch gradient)
+                        grads = jax.tree.map(
+                            lambda g: g.astype(opt_cfg.grad_reduce_dtype),
+                            grads)
+                    grads = jax.lax.with_sharding_constraint(
+                        grads, params_sh_tree)
+                    return (jax.tree.map(
+                        lambda a, g: a + g.astype(jnp.float32),
+                        g_acc, grads), l_acc + loss), None
+                zeros = jax.lax.with_sharding_constraint(
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state["params"]), params_sh_tree)
+                (grads, loss), _ = jax.lax.scan(
+                    micro, (zeros, jnp.zeros((), jnp.float32)), mbs)
+                grads = jax.tree.map(lambda g: g / accum, grads)
+                loss = loss / accum
+            else:
+                (loss, _), grads = grads_of(state["params"], batch)
+            params, opt, metrics = apply_updates(
+                opt_cfg, state["params"], grads, state["opt"])
+            new_state = {"params": params, "opt": opt,
+                         "rng": jax.random.fold_in(state["rng"], 0),
+                         "step": state["step"] + 1}
+            return new_state, dict(metrics, loss=loss)
+
+        tokens = shape.global_batch * shape.seq_len
+        from repro.launch.units import loops_for, micro_loop
+        loops = list(loops_for(model, cfg, shape, mesh, rules, "train",
+                               accum))
+        if accum > 1:
+            # compose corrections: layer unit runs accum*reps times total;
+            # full counts it once, micro adds (accum-1) more.
+            for lp in loops:
+                lp.trips = accum * (lp.trips - 1) + 1
+            loops.append(micro_loop(model, cfg, shape, mesh, rules, accum,
+                                    batch_abs, batch_sh))
+        return Cell(arch, shape_name, with_act_rules(train_step, mesh,
+                                                      rules),
+                    (state_abs, batch_abs), (state_sh, batch_sh),
+                    (state_sh, None), donate=(0,),
+                    model_flops=6.0 * n_active * tokens, tokens=tokens,
+                    loops=tuple(loops), note=f"accum={accum}")
+
+    if rules is None:
+        rules = rules_for(shape, mesh)
+    params_abs = abstract_params(model.specs(), jnp.dtype(cfg.param_dtype))
+    params_sh = _sharding_tree(model.logical(), _shapes_of(model.specs()),
+                               mesh, rules)
+
+    if shape.kind == "prefill":
+        batch_abs = _batch_abstract(cfg, shape)
+        b = shape.global_batch
+        cache_abs, cache_sh = _cache_state(model, cfg, b, shape.seq_len,
+                                           mesh, rules)
+        batch_sh = _sharding_tree(
+            _batch_logical(cfg),
+            jax.tree.map(lambda s: s.shape, batch_abs), mesh, rules)
+        if cfg.family == "encdec":
+            def prefill_step(params, batch):
+                return model.prefill(params, batch["frontend"],
+                                     batch["tokens"], shape.seq_len // 2)
+        elif cfg.frontend:
+            def prefill_step(params, batch):
+                return model.prefill(params, batch["tokens"],
+                                     shape.seq_len,
+                                     extra_embeds=batch["frontend"])
+        else:
+            def prefill_step(params, batch):
+                return model.prefill(params, batch["tokens"],
+                                     shape.seq_len)
+        tokens = shape.global_batch * shape.seq_len
+        from repro.launch.units import loops_for
+        loops = loops_for(model, cfg, shape, mesh, rules, "prefill")
+        return Cell(arch, shape_name, with_act_rules(prefill_step, mesh,
+                                                      rules),
+                    (params_abs, batch_abs), (params_sh, batch_sh),
+                    (None, cache_sh), donate=(),
+                    model_flops=2.0 * n_active * tokens, tokens=tokens,
+                    loops=loops)
+
+    # decode: one new token against a seq_len-deep cache
+    b = shape.global_batch
+    max_len = shape.seq_len if cfg.family != "encdec" else shape.seq_len // 2
+    cache_abs, cache_sh = _cache_state(model, cfg, b, max_len, mesh, rules)
+    tok_abs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    tok_sh = NamedSharding(mesh, rules.spec_for(("batch", None), (b, 1),
+                                                mesh))
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_sh = NamedSharding(mesh, P())
+
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    tokens = b
+    from repro.launch.units import loops_for
+    loops = loops_for(model, cfg, shape, mesh, rules, "decode")
+    return Cell(arch, shape_name, with_act_rules(serve_step, mesh, rules),
+                (params_abs, cache_abs, tok_abs, pos_abs),
+                (params_sh, cache_sh, tok_sh, pos_sh),
+                (None, cache_sh), donate=(1,),
+                model_flops=2.0 * n_active * tokens, tokens=tokens,
+                loops=loops)

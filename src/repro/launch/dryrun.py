@@ -1,0 +1,169 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the production meshes need 512 host placeholder devices.  Only
+this entry point sets the flag — tests and benches see 1 device.
+
+For every live cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. lowers + compiles the cell's step with ShapeDtypeStruct inputs,
+  3. prints memory_analysis() (fits-in-HBM proof) and cost_analysis()
+     (FLOPs/bytes for the roofline),
+  4. parses collective bytes from the optimized HLO,
+  5. writes a JSON artifact consumed by benchmarks/roofline_report.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both \
+      --out artifacts/dryrun [--shape train_4k] [--skip-existing]
+"""
+import argparse     # noqa: E402
+import json         # noqa: E402
+import pathlib      # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+
+from repro.launch.cells import build_cell, rules_for            # noqa: E402
+from repro.launch.mesh import make_production_mesh              # noqa: E402
+from repro.launch.shapes import SHAPES, applicable              # noqa: E402
+from repro.roofline.analysis import (cost_summary, memory_summary,  # noqa: E402
+                                     parse_collectives, roofline_terms)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: pathlib.Path,
+             verbose: bool = True, rules=None, cfg_overrides=None,
+             accum=None, opt_cfg=None, tag: str = "") -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+           "chips": 512 if multi_pod else 256, "status": "ok", "tag": tag}
+    ok, why = applicable(arch, shape)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        t0 = time.perf_counter()
+        kw = {} if opt_cfg is None else {"opt_cfg": opt_cfg}
+        cell = build_cell(arch, shape, mesh, rules=rules,
+                          cfg_overrides=cfg_overrides, accum=accum, **kw)
+        with mesh:
+            jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                             out_shardings=cell.out_shardings,
+                             donate_argnums=cell.donate)
+            lowered = jitted.lower(*cell.args)
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            t2 = time.perf_counter()
+        mem = memory_summary(compiled)
+        cost = cost_summary(compiled)
+        coll = parse_collectives(compiled.as_text())
+        # Loop-unit extrapolation: cost_analysis counts while bodies once.
+        flops, nbytes = cost["flops"], cost["bytes"]
+        coll_total = float(sum(coll.values()))
+        unit_recs = []
+        for lp in cell.loops:
+            with mesh:
+                kw = {}
+                if lp.out_shardings is not None:
+                    kw["out_shardings"] = lp.out_shardings
+                uc = jax.jit(lp.fn, in_shardings=lp.in_shardings,
+                             **kw).lower(*lp.args).compile()
+            u_cost = cost_summary(uc)
+            u_coll = parse_collectives(uc.as_text())
+            u_coll_total = float(sum(u_coll.values()))
+            if "flops" in lp.use:
+                flops += (lp.trips - 1) * u_cost["flops"]
+                nbytes += (lp.trips - 1) * u_cost["bytes"]
+            if "coll" in lp.use:
+                coll_total += (lp.trips - 1) * u_coll_total
+                for k, v in u_coll.items():
+                    coll[k] = coll.get(k, 0) + (lp.trips - 1) * v
+            unit_recs.append({"name": lp.name, "trips": lp.trips,
+                              "use": list(lp.use),
+                              "flops": u_cost["flops"],
+                              "bytes": u_cost["bytes"],
+                              "coll": u_coll_total})
+        cost = dict(cost, flops=flops, bytes=nbytes, units=unit_recs)
+        chips = rec["chips"]
+        rl = roofline_terms(
+            per_device_flops=flops,
+            per_device_bytes=nbytes,
+            per_device_coll_bytes=coll_total,
+            chips=chips, model_flops=cell.model_flops)
+        rec.update(lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+                   memory=mem, cost=cost, collectives=coll,
+                   roofline=rl.as_dict(), tokens=cell.tokens)
+        if verbose:
+            print(f"[{arch} x {shape} x {mesh_name}] "
+                  f"lower {t1-t0:.1f}s compile {t2-t1:.1f}s")
+            print(f"  memory_analysis: args={mem['argument_size_in_bytes']/1e9:.2f}GB "
+                  f"out={mem['output_size_in_bytes']/1e9:.2f}GB "
+                  f"temp={mem['temp_size_in_bytes']/1e9:.2f}GB "
+                  f"(per device; HBM 16GB)")
+            print(f"  cost_analysis: flops/dev={cost['flops']:.3e} "
+                  f"bytes/dev={cost['bytes']:.3e}")
+            print(f"  collectives/dev: " + (", ".join(
+                f"{k}={v/1e6:.1f}MB" for k, v in sorted(coll.items()))
+                or "none"))
+            print(f"  roofline: compute={rl.compute_s*1e3:.2f}ms "
+                  f"memory={rl.memory_s*1e3:.2f}ms "
+                  f"collective={rl.collective_s*1e3:.2f}ms "
+                  f"-> dominant={rl.dominant} mfu={rl.mfu:.3f} "
+                  f"useful={rl.useful_ratio:.2f}")
+    except Exception as e:  # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[{arch} x {shape} x {mesh_name}] FAILED: {rec['error']}")
+    if out_dir is not None:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        path = out_dir / f"{arch}__{shape}__{mesh_name}{suffix}.json"
+        path.write_text(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import list_archs
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    out = pathlib.Path(args.out)
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                mesh_name = "pod2x16x16" if multi else "pod16x16"
+                path = out / f"{arch}__{shape}__{mesh_name}.json"
+                if args.skip_existing and path.exists():
+                    prev = json.loads(path.read_text())
+                    if prev.get("status") == "ok":
+                        n_ok += 1
+                        continue
+                rec = run_cell(arch, shape, multi, out)
+                n_ok += rec["status"] == "ok"
+                n_skip += rec["status"] == "skipped"
+                n_err += rec["status"] == "error"
+    print(f"\ndry-run complete: {n_ok} ok, {n_skip} skipped (documented), "
+          f"{n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Serving launcher: batched decode for any assigned arch.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced
+"""
+import argparse
+import dataclasses
+import sys
+import time
+
+import jax
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=256)
+    args = ap.parse_args()
+
+    from repro.models import build_model, get_model, reduced_config
+    from repro.runtime import Request, Server
+
+    _, cfg = get_model(args.arch)
+    if args.reduced:
+        cfg = dataclasses.replace(reduced_config(cfg), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    server = Server(model, params, batch=args.batch, max_len=args.max_len)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 8),
+                    max_new_tokens=args.new_tokens)
+            for i in range(args.requests)]
+    t0 = time.perf_counter()
+    done = server.run(reqs)
+    dt = time.perf_counter() - t0
+    tokens = sum(len(v) for v in done.values())
+    print(f"{cfg.name}: {tokens} tokens, {len(done)} requests, "
+          f"{tokens/dt:.1f} tok/s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,79 @@
+"""Training launcher: any assigned arch, optional elasticity.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+      --steps 100 [--reduced] [--slices 4 --devices 8 --elastic]
+
+With --devices N the launcher requests N CPU host devices (like the
+dry-run) so multi-slice elasticity runs for real on one host; on TPU the
+flag is unnecessary.
+"""
+import argparse
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-friendly)")
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--slices", type=int, default=1)
+    ap.add_argument("--model-ways", type=int, default=1)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="request N CPU host devices before jax init")
+    ap.add_argument("--elastic", action="store_true",
+                    help="attach a LocalRMS and honour DMR decisions")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+
+    from repro.data import DataConfig
+    from repro.models import build_model, get_model, reduced_config
+    from repro.optim import AdamWConfig
+    from repro.rms.job import Job
+    from repro.runtime import ElasticTrainer, LocalRMS, TrainerConfig
+
+    _, cfg = get_model(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    model = build_model(cfg)
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                      global_batch=args.global_batch,
+                      frontend=cfg.frontend,
+                      frontend_tokens=cfg.frontend_tokens,
+                      d_model=cfg.d_model, enc_dec=cfg.family == "encdec")
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                      total_steps=args.steps)
+    rms = None
+    if args.elastic:
+        rms = LocalRMS(num_nodes=max(args.devices // args.model_ways, 1))
+        rms.submit(Job(job_id=0, app=f"lm:{cfg.name}", submit_time=0.0,
+                       work=args.steps, min_nodes=1,
+                       max_nodes=rms.cluster.num_nodes, preferred=None,
+                       requested_nodes=args.slices), start=True)
+    trainer = ElasticTrainer(
+        model, opt, data,
+        TrainerConfig(steps=args.steps, model_ways=args.model_ways,
+                      max_slices=max(args.slices, 1),
+                      log_period=max(args.steps // 10, 1),
+                      ckpt_dir=args.ckpt_dir),
+        rms=rms, job_id=0)
+    trainer.train()
+    for m in trainer.metrics:
+        print(f"step {m['step']:5d} loss {m['loss']:.4f} "
+              f"slices {m['slices']}")
+    if trainer.resize_log:
+        print("resizes:", trainer.resize_log)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

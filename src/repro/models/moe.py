@@ -1,0 +1,103 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity dispatch, shared experts.
+
+TPU adaptation: experts are stacked ``(E, D, F)`` and sharded over the
+``model`` mesh axis (expert parallelism rides the existing TP axis).
+Activations are sharded over ``batch`` (data axes) and *replicated* over
+``model``, so the capacity gather/scatter is local to each device and the
+only communication is the same reduction TP already pays at the block
+output — no all-to-all.  Routing is per batch row (group) with capacity
+``C = ceil(S * k / E * capacity_factor)``; overflow tokens drop to the
+residual path (standard Switch behaviour).
+
+Supports DeepSeekMoE fine-grained layout (64 routed top-6 + 2 shared
+experts, first layer dense) and Phi-3.5-MoE (16 routed top-2).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, act_fn, mlp_apply, mlp_specs
+
+
+def moe_specs(cfg) -> Dict[str, Any]:
+    e, f, ne = cfg.d_model, cfg.expert_d_ff or cfg.d_ff, cfg.num_experts
+    specs = {
+        "router": ParamSpec((e, ne), ("embed", "experts")),
+        "w_gate": ParamSpec((ne, e, f), ("experts", "embed", "expert_mlp")),
+        "w_up": ParamSpec((ne, e, f), ("experts", "embed", "expert_mlp")),
+        "w_down": ParamSpec((ne, f, e), ("experts", "expert_mlp", "embed")),
+    }
+    if cfg.num_shared_experts:
+        specs["shared"] = mlp_specs(
+            cfg, d_ff=cfg.num_shared_experts * (cfg.expert_d_ff or cfg.d_ff))
+    return specs
+
+
+def capacity(cfg, seq: int, factor: float = 1.25) -> int:
+    c = math.ceil(seq * cfg.top_k / cfg.num_experts * factor)
+    return max(8, min(c, seq))
+
+
+def moe_apply(params, x, cfg, capacity_factor: float = None):
+    """x: (B, S, E) -> (y, aux_loss)."""
+    bsz, s, d = x.shape
+    ne, k = cfg.num_experts, cfg.top_k
+    if capacity_factor is None:
+        capacity_factor = cfg.capacity_factor
+    cap = capacity(cfg, s, capacity_factor)
+    dt = x.dtype
+
+    logits = (x @ params["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                   # (B,S,E)
+    weights, experts = jax.lax.top_k(probs, k)                # (B,S,k)
+    weights = weights / jnp.sum(weights, -1, keepdims=True)   # renormalize
+
+    # Load-balancing auxiliary loss (Switch): E * sum_e f_e * P_e
+    one_hot_all = jax.nn.one_hot(experts, ne, dtype=jnp.float32)  # (B,S,k,E)
+    f_e = one_hot_all.sum(axis=2).mean(axis=(0, 1))           # fraction routed
+    p_e = probs.mean(axis=(0, 1))
+    aux = cfg.router_aux_coef * ne * jnp.sum(f_e * p_e)
+
+    # ---- capacity dispatch (per batch row; gathers stay device-local) ----
+    flat_e = experts.reshape(bsz, s * k)                      # (B,S*k)
+    flat_w = weights.reshape(bsz, s * k).astype(dt)
+    choice_oh = jax.nn.one_hot(flat_e, ne, dtype=jnp.int32)   # (B,S*k,E)
+    pos = jnp.cumsum(choice_oh, axis=1) - 1                   # pos within expert
+    my_pos = jnp.take_along_axis(pos, flat_e[..., None],
+                                 axis=-1)[..., 0]             # (B,S*k)
+    keep = my_pos < cap
+    slot = jnp.where(keep, flat_e * cap + my_pos, ne * cap)   # overflow slot
+    token_of_choice = jnp.broadcast_to(
+        (jnp.arange(s * k) // k)[None, :], (bsz, s * k))
+
+    # dispatch index buffer: slot -> token id (sentinel s for empty)
+    disp = jnp.full((bsz, ne * cap + 1), s, jnp.int32)
+    disp = jax.vmap(lambda d_, sl, tok: d_.at[sl].set(tok, mode="drop"))(
+        disp, slot, token_of_choice.astype(jnp.int32))
+    disp_w = jnp.zeros((bsz, ne * cap + 1), dt)
+    disp_w = jax.vmap(lambda d_, sl, w_: d_.at[sl].set(w_, mode="drop"))(
+        disp_w, slot, flat_w)
+    disp, disp_w = disp[:, :-1], disp_w[:, :-1]
+
+    x_pad = jnp.concatenate([x, jnp.zeros((bsz, 1, d), dt)], axis=1)
+    expert_in = jnp.take_along_axis(
+        x_pad, disp[..., None], axis=1).reshape(bsz, ne, cap, d)
+
+    act = act_fn(cfg.act)
+    h = act(jnp.einsum("becd,edf->becf", expert_in,
+                       params["w_gate"].astype(dt))) * \
+        jnp.einsum("becd,edf->becf", expert_in, params["w_up"].astype(dt))
+    expert_out = jnp.einsum("becf,efd->becd", h, params["w_down"].astype(dt))
+    expert_out = expert_out.reshape(bsz, ne * cap, d) * disp_w[..., None]
+
+    y = jnp.zeros((bsz, s + 1, d), dt)
+    y = jax.vmap(lambda y_, idx, val: y_.at[idx].add(val, mode="drop"))(
+        y, disp, expert_out)[:, :-1]
+
+    if cfg.num_shared_experts:
+        y = y + mlp_apply(params["shared"], x, cfg)
+    return y, aux

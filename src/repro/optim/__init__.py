@@ -1,0 +1,10 @@
+"""Optimizer substrate: AdamW, schedules, ZeRO-1, gradient compression."""
+from repro.optim.adamw import (AdamWConfig, apply_updates, global_norm,
+                               init_state, schedule, state_logical,
+                               zero1_logical)
+from repro.optim.compression import (compressed_psum_grads,
+                                     make_compressed_allreduce)
+
+__all__ = ["AdamWConfig", "apply_updates", "global_norm", "init_state",
+           "schedule", "state_logical", "zero1_logical",
+           "compressed_psum_grads", "make_compressed_allreduce"]

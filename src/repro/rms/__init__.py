@@ -1,0 +1,14 @@
+"""RMS: Slurm-analogue resource manager (cluster, policy, scheduler, sim)."""
+from repro.rms.cluster import Cluster
+from repro.rms.costmodel import PAPER_APPS, AppModel, ReconfigCostModel, lm_app_model
+from repro.rms.job import Job, JobState
+from repro.rms.policy import PolicyConfig, ReconfigPolicy, factor_sizes
+from repro.rms.scheduler import MAX_PRIORITY, Scheduler, SchedulerConfig
+from repro.rms.simulator import (ActionRecord, ClusterSimulator, SimConfig,
+                                 SimReport)
+
+__all__ = ["Cluster", "PAPER_APPS", "AppModel", "ReconfigCostModel",
+           "lm_app_model", "Job", "JobState", "PolicyConfig",
+           "ReconfigPolicy", "factor_sizes", "MAX_PRIORITY", "Scheduler",
+           "SchedulerConfig", "ActionRecord", "ClusterSimulator",
+           "SimConfig", "SimReport"]

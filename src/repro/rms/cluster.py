@@ -1,0 +1,112 @@
+"""Homogeneous-cluster resource inventory.
+
+Tracks node identity (not just counts) so node failures and stragglers can
+target specific nodes.  Expansion reuses a job's original nodes and appends
+new ones (the paper's resizer-job protocol, §5.2.1); shrinking releases the
+tail (the sender nodes of the fold, §5.2.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Set
+
+
+@dataclasses.dataclass
+class Cluster:
+    num_nodes: int
+
+    def __post_init__(self):
+        self.free: List[int] = list(range(self.num_nodes))
+        self.owned: Dict[int, List[int]] = {}     # job_id -> ordered node list
+        self.dead: Set[int] = set()
+        self.slow: Dict[int, float] = {}          # node -> slowdown multiplier
+
+    # -- queries --------------------------------------------------------------
+
+    @property
+    def free_nodes(self) -> int:
+        return len(self.free)
+
+    def allocation(self, job_id: int) -> int:
+        return len(self.owned.get(job_id, ()))
+
+    @property
+    def allocated_nodes(self) -> int:
+        return sum(len(v) for v in self.owned.values())
+
+    def job_rate_factor(self, job_id: int) -> float:
+        """min over owned nodes of 1/slowdown — a straggler gates the job."""
+        nodes = self.owned.get(job_id, ())
+        if not nodes:
+            return 1.0
+        worst = max((self.slow.get(n, 1.0) for n in nodes), default=1.0)
+        return 1.0 / worst
+
+    # -- mutations -------------------------------------------------------------
+
+    def allocate(self, job_id: int, n: int) -> List[int]:
+        if n > len(self.free):
+            raise RuntimeError(
+                f"over-allocation: job {job_id} wants {n}, free {len(self.free)}")
+        nodes, self.free = self.free[:n], self.free[n:]
+        self.owned.setdefault(job_id, []).extend(nodes)
+        return nodes
+
+    def resize(self, job_id: int, new_n: int) -> int:
+        """Grow/shrink a job's allocation; returns delta (nodes gained)."""
+        cur = self.allocation(job_id)
+        if new_n > cur:
+            self.allocate(job_id, new_n - cur)
+        elif new_n < cur:
+            released = self.owned[job_id][new_n:]
+            self.owned[job_id] = self.owned[job_id][:new_n]
+            self.free.extend(released)
+        return new_n - cur
+
+    def release(self, job_id: int) -> None:
+        self.free.extend(self.owned.pop(job_id, []))
+
+    # -- failures / stragglers ---------------------------------------------------
+
+    def fail_node(self, node: int):
+        """Mark a node dead. Returns the owning job_id (or None)."""
+        self.dead.add(node)
+        if node in self.free:
+            self.free.remove(node)
+            return None
+        for job_id, nodes in self.owned.items():
+            if node in nodes:
+                nodes.remove(node)
+                return job_id
+        return None
+
+    def set_straggler(self, node: int, slowdown: float):
+        """Owning job (if any) is returned so the RMS can react."""
+        self.slow[node] = slowdown
+        for job_id, nodes in self.owned.items():
+            if node in nodes:
+                return job_id
+        return None
+
+    def swap_straggler(self, job_id: int) -> int:
+        """Migrate the job off its slowest node onto a free healthy node.
+
+        Returns the number of swaps performed (0 or 1).  Data movement is one
+        slice migration (``repro.core.redistribute.migrate_slice``).
+        """
+        nodes = self.owned.get(job_id, ())
+        if not nodes:
+            return 0
+        worst = max(nodes, key=lambda n: self.slow.get(n, 1.0))
+        if self.slow.get(worst, 1.0) <= 1.0:
+            return 0
+        healthy = [n for n in self.free
+                   if self.slow.get(n, 1.0) <= 1.0 and n not in self.dead]
+        if not healthy:
+            return 0
+        repl = healthy[0]
+        self.free.remove(repl)
+        idx = nodes.index(worst)
+        nodes[idx] = repl
+        self.free.append(worst)
+        return 1

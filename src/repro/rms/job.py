@@ -1,0 +1,83 @@
+"""Job model for the RMS (paper §2 taxonomy).
+
+A job is *fixed* (rigid/moldable: constant process count) or *flexible*
+(malleable/evolving: reconfigurable on-the-fly).  The RMS counts resources in
+*nodes*; in the JAX mapping one node = one data-parallel mesh slice (tensor
+parallelism inside the slice is fixed, like cores within a node).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional, Tuple
+
+
+class JobState(enum.Enum):
+    PENDING = "pending"
+    RUNNING = "running"
+    COMPLETED = "completed"
+    CANCELLED = "cancelled"
+
+
+@dataclasses.dataclass
+class Job:
+    job_id: int
+    app: str                      # "cg" | "jacobi" | "nbody" | "fs" | "lm:<arch>"
+    submit_time: float
+    work: float                   # total work units (app iterations)
+    min_nodes: int
+    max_nodes: int
+    preferred: Optional[int]      # Table 1 "Preferred"
+    factor: int = 2               # resize factor (Table 1: 2 for all malleable)
+    malleable: bool = True
+    check_period_s: float = 15.0  # Table 1 "Scheduling period" (0 = every iter)
+    requested_nodes: int = 0      # submission size (paper: launched at max)
+    data_bytes: int = 0           # redistributed state size (FS: 1 GB)
+
+    # -- dynamic state (owned by the RMS / simulator) ------------------------
+    state: JobState = JobState.PENDING
+    nodes: int = 0                # current allocation
+    priority_boost: float = 0.0   # max-priority path (shrink trigger / RJ)
+    start_time: float = -1.0
+    end_time: float = -1.0
+    work_done: float = 0.0
+    last_progress_t: float = -1.0
+    paused_until: float = -1.0    # reconfiguration in progress
+    completion_version: int = 0   # invalidates stale completion events
+    resizer_for: Optional[int] = None   # this job is an RJ for job `id`
+    nodes_history: List[Tuple[float, int]] = dataclasses.field(
+        default_factory=list)
+
+    def __post_init__(self):
+        if self.requested_nodes == 0:
+            self.requested_nodes = self.max_nodes
+
+    # -- metrics (paper §7.4/§7.5 definitions) -------------------------------
+    @property
+    def wait_time(self) -> float:
+        if self.start_time < 0:
+            return 0.0
+        return self.start_time - self.submit_time
+
+    @property
+    def exec_time(self) -> float:
+        if self.end_time < 0 or self.start_time < 0:
+            return 0.0
+        return self.end_time - self.start_time
+
+    @property
+    def completion_time(self) -> float:
+        """Submission -> finalization (wait + exec)."""
+        if self.end_time < 0:
+            return 0.0
+        return self.end_time - self.submit_time
+
+    def record_nodes(self, t: float) -> None:
+        self.nodes_history.append((t, self.nodes))
+
+    def node_seconds(self) -> float:
+        """Integral of allocated nodes over time (for utilization)."""
+        total, hist = 0.0, self.nodes_history
+        for (t0, n0), (t1, _n1) in zip(hist, hist[1:]):
+            total += n0 * (t1 - t0)
+        return total

@@ -1,0 +1,478 @@
+"""Discrete-event cluster simulator — the paper's §7 testbed.
+
+Runs a workload of jobs (CG / Jacobi / N-body / FS / elastic-LM) through the
+RMS with either the *fixed* or the *flexible* (malleable) configuration and
+either *synchronous* or *asynchronous* DMR scheduling, reproducing the
+paper's measurements:
+
+- per-action overheads (Table 2, Fig. 3),
+- cluster utilization + per-job wait/exec/completion gains (Table 3),
+- workload throughput across sizes (Table 4, Figs. 4/5),
+- time-evolution traces and per-job diffs (Figs. 6/7/8).
+
+Beyond the paper: node-failure and straggler events exercise the
+fault-tolerance paths (shrink-to-survivors, checkpoint restart, slice
+migration) that make the same mechanism deployable at scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import time as _time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.actions import Action, Decision
+from repro.rms.cluster import Cluster
+from repro.rms.costmodel import PAPER_APPS, AppModel, ReconfigCostModel
+from repro.rms.job import Job, JobState
+from repro.rms.policy import PolicyConfig, ReconfigPolicy
+from repro.rms.scheduler import MAX_PRIORITY, Scheduler, SchedulerConfig
+
+
+@dataclasses.dataclass
+class SimConfig:
+    num_nodes: int = 64
+    flexible: bool = True
+    scheduling: str = "sync"          # "sync" | "async"
+    expand_timeout_s: float = 40.0
+    launch_latency_s: float = 1.0
+    checkpoint_period_s: float = 120.0
+    straggler_scan_s: float = 30.0
+    straggler_threshold: float = 0.8
+    seed: int = 7
+    policy: PolicyConfig = dataclasses.field(default_factory=PolicyConfig)
+    sched: SchedulerConfig = dataclasses.field(default_factory=SchedulerConfig)
+    cost: ReconfigCostModel = dataclasses.field(
+        default_factory=ReconfigCostModel)
+    failures: Tuple[Tuple[float, int], ...] = ()          # (time, node)
+    stragglers: Tuple[Tuple[float, int, float], ...] = () # (time, node, slow)
+
+
+@dataclasses.dataclass
+class ActionRecord:
+    t: float
+    job_id: int
+    action: str
+    decide_s: float      # RMS decision latency (Table 2 reports this)
+    apply_s: float       # data redistribution + waits (Fig. 3b)
+    from_nodes: int
+    to_nodes: int
+    timed_out: bool = False
+    reason: str = ""
+
+
+@dataclasses.dataclass
+class SimReport:
+    config: SimConfig
+    jobs: List[Job]
+    actions: List[ActionRecord]
+    timeline: List[Tuple[float, int, int, int]]  # (t, allocated, running, done)
+    makespan: float
+    wall_time_s: float
+    # real measured in-process policy latencies (seconds), for Table 2
+    policy_wall_s: List[float] = dataclasses.field(default_factory=list)
+
+    # -- aggregate measures (paper definitions) -----------------------------
+
+    def utilization(self, sample_s: float = 10.0) -> Tuple[float, float]:
+        """Time-sampled allocated-node fraction: (avg %, std %)."""
+        if not self.timeline:
+            return 0.0, 0.0
+        ts = np.array([e[0] for e in self.timeline])
+        alloc = np.array([e[1] for e in self.timeline], dtype=float)
+        t_end = self.makespan if self.makespan > 0 else ts[-1]
+        grid = np.arange(0.0, max(t_end, sample_s), sample_s)
+        idx = np.clip(np.searchsorted(ts, grid, side="right") - 1, 0, None)
+        samples = alloc[idx] / self.config.num_nodes * 100.0
+        return float(samples.mean()), float(samples.std())
+
+    def job_metrics(self) -> Dict[int, Tuple[float, float, float]]:
+        return {j.job_id: (j.wait_time, j.exec_time, j.completion_time)
+                for j in self.jobs if j.state is JobState.COMPLETED}
+
+    def averages(self) -> Tuple[float, float, float]:
+        m = list(self.job_metrics().values())
+        if not m:
+            return 0.0, 0.0, 0.0
+        arr = np.array(m)
+        return tuple(arr.mean(axis=0))  # wait, exec, completion
+
+
+class ClusterSimulator:
+    def __init__(self, jobs: List[Job], config: SimConfig = SimConfig(),
+                 apps: Optional[Dict[str, AppModel]] = None):
+        self.config = config
+        self.apps = dict(PAPER_APPS if apps is None else apps)
+        self.jobs = jobs
+        self.cluster = Cluster(config.num_nodes)
+        self.policy = ReconfigPolicy(config.policy)
+        self.scheduler = Scheduler(self.cluster, config.sched)
+        self.rng = np.random.default_rng(config.seed)
+        self.now = 0.0
+        self._heap: List[Tuple[float, int, str, tuple]] = []
+        self._seq = itertools.count()
+        self.actions: List[ActionRecord] = []
+        self.timeline: List[Tuple[float, int, int, int]] = []
+        self._completed = 0
+        self._waiting_expands: List[dict] = []   # async stale-grant waits
+        self._pending_async: Dict[int, Tuple[Decision, float]] = {}
+        self._ckpt_work: Dict[int, float] = {}
+        self._wall_decide_s: List[float] = []
+
+    # -- plumbing ------------------------------------------------------------
+
+    def _push(self, t: float, kind: str, *payload):
+        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+
+    def _app(self, job: Job) -> AppModel:
+        return self.apps[job.app]
+
+    def _rate(self, job: Job) -> float:
+        return (self._app(job).rate(job.nodes)
+                * self.cluster.job_rate_factor(job.job_id))
+
+    def _advance(self, job: Job):
+        if job.state is not JobState.RUNNING:
+            return
+        t0 = max(job.last_progress_t, job.paused_until)
+        if self.now > t0 >= 0:
+            job.work_done = min(job.work,
+                                job.work_done + self._rate(job)
+                                * (self.now - t0))
+        job.last_progress_t = max(self.now, job.paused_until)
+
+    def _pause(self, job: Job, seconds: float):
+        self._advance(job)
+        job.paused_until = max(job.paused_until, self.now) + seconds
+        job.last_progress_t = job.paused_until
+
+    def _schedule_completion(self, job: Job):
+        job.completion_version += 1
+        remaining = max(job.work - job.work_done, 0.0)
+        t0 = max(self.now, job.paused_until)
+        t_end = t0 + remaining / self._rate(job)
+        self._push(t_end, "complete", job.job_id, job.completion_version)
+
+    def _snapshot(self):
+        running = sum(1 for j in self.jobs if j.state is JobState.RUNNING)
+        self.timeline.append((self.now, self.cluster.allocated_nodes,
+                              running, self._completed))
+
+    def _pending_jobs(self) -> List[Job]:
+        return [j for j in self.jobs if j.state is JobState.PENDING
+                and j.submit_time <= self.now]
+
+    def _runtime_estimate(self, job: Job) -> float:
+        app = self._app(job)
+        nodes = job.nodes or job.requested_nodes
+        remaining = max(job.work - job.work_done, 0.0)
+        return remaining / app.rate(nodes)
+
+    # -- scheduling ------------------------------------------------------------
+
+    def _scheduler_pass(self):
+        self._grant_waiting_expands()
+        starts = self.scheduler.schedule(
+            self._pending_jobs(),
+            [j for j in self.jobs if j.state is JobState.RUNNING],
+            self.now, self._runtime_estimate)
+        for job, n in starts:
+            self.cluster.allocate(job.job_id, n)
+            job.nodes = n
+            job.state = JobState.RUNNING
+            job.start_time = self.now
+            job.priority_boost = 0.0
+            job.last_progress_t = self.now + self.config.launch_latency_s
+            job.paused_until = job.last_progress_t
+            job.record_nodes(self.now)
+            self._ckpt_work[job.job_id] = 0.0
+            self._schedule_completion(job)
+            if self.config.flexible and job.malleable:
+                self._push(self._next_check_time(job), "check", job.job_id)
+        if starts:
+            self._snapshot()
+
+    def _next_check_time(self, job: Job) -> float:
+        app = self._app(job)
+        period = app.check_period_s or app.iter_time(job.nodes)
+        return max(self.now, job.paused_until) + period
+
+    # -- the DMR check (paper §5) ----------------------------------------------
+
+    def _decide(self, job: Job) -> Tuple[Decision, float]:
+        app = self._app(job)
+        wall0 = _time.perf_counter()
+        decision = self.policy.decide(
+            self.cluster, self._pending_jobs(), job,
+            minimum=app.min_nodes, maximum=app.max_nodes,
+            factor=job.factor, preferred=app.preferred)
+        wall = _time.perf_counter() - wall0  # real policy latency (measured)
+        self._wall_decide_s.append(wall)
+        nodes_involved = max(job.nodes, decision.new_slices)
+        model_s = self.config.cost.schedule_time(
+            decision.action, nodes_involved, rng=self.rng)
+        # deterministic sim time: the measured in-process latency is
+        # reported separately (SimReport.policy_wall_s), not injected.
+        return decision, model_s
+
+    def _apply(self, job: Job, decision: Decision, decide_s: float,
+               waited_s: float = 0.0, pause_decide: bool = True):
+        app = self._app(job)
+        old = job.nodes
+        if decision.action is Action.NO_ACTION:
+            self.actions.append(ActionRecord(
+                self.now, job.job_id, "no_action", decide_s, 0.0, old, old,
+                reason=decision.reason))
+            return
+        new = decision.new_slices
+        if decision.action is Action.EXPAND and \
+                new - old > self.cluster.free_nodes:
+            # Stale grant that cannot be satisfied now (async path).
+            self.actions.append(ActionRecord(
+                self.now, job.job_id, "expand", decide_s, waited_s, old, old,
+                timed_out=True, reason="stale-grant"))
+            return
+        resize_s = self.config.cost.resize_time(old, new, app.data_bytes)
+        self.cluster.resize(job.job_id, new)
+        # Async mode hides the scheduling latency behind the previous step
+        # (§5.1: "the communication overhead in that step is avoided").
+        self._pause(job, (decide_s if pause_decide else 0.0) + resize_s)
+        job.nodes = new
+        job.record_nodes(self.now)
+        self._ckpt_work[job.job_id] = job.work_done
+        name = "expand" if decision.action is Action.EXPAND else "shrink"
+        self.actions.append(ActionRecord(
+            self.now, job.job_id, name, decide_s, waited_s + resize_s,
+            old, new, reason=decision.reason))
+        if decision.boost_job_id is not None:
+            for q in self.jobs:
+                if q.job_id == decision.boost_job_id:
+                    q.priority_boost = MAX_PRIORITY
+        self._schedule_completion(job)
+        self._snapshot()
+        if new < old:
+            self._scheduler_pass()   # freed nodes may start queued jobs
+
+    def _grant_waiting_expands(self):
+        """Feed freed nodes to waiting resizer jobs (max priority, §5.2.1).
+
+        An RJ holds a *reservation*: nodes it has already claimed are
+        invisible to the scheduler until the expand completes or times out —
+        this queue starvation is the async-mode pathology of Table 2.
+        """
+        still = []
+        for w in self._waiting_expands:
+            job, decision = w["job"], w["decision"]
+            rj_id = -(job.job_id + 1)           # pseudo-job for the RJ
+            if job.state is not JobState.RUNNING:
+                self.cluster.release(rj_id)
+                continue
+            delta = decision.new_slices - job.nodes
+            need = delta - self.cluster.allocation(rj_id)
+            grab = min(need, self.cluster.free_nodes)
+            if grab > 0:
+                self.cluster.allocate(rj_id, grab)
+            if self.cluster.allocation(rj_id) >= delta:
+                self.cluster.release(rj_id)     # hand the nodes to the job
+                waited = self.now - w["since"]
+                self._apply(job, decision, w["decide_s"], waited_s=waited,
+                            pause_decide=False)
+                job.paused_until = max(job.paused_until, self.now)
+                self._schedule_completion(job)
+            else:
+                still.append(w)
+        self._waiting_expands = still
+
+    def _on_check(self, job: Job):
+        if job.state is not JobState.RUNNING:
+            return
+        self._advance(job)
+        if any(w["job"].job_id == job.job_id for w in self._waiting_expands):
+            self._push(self._next_check_time(job), "check", job.job_id)
+            return
+        if self.config.scheduling == "async":
+            # Apply the decision scheduled at the previous point…
+            prev = self._pending_async.pop(job.job_id, None)
+            if prev is not None:
+                decision, decide_s = prev
+                if decision.action is Action.EXPAND and \
+                        decision.new_slices - job.nodes > \
+                        self.cluster.free_nodes:
+                    # …whose resources may have vanished: wait w/ timeout.
+                    self._pause(job, 0.0)
+                    self._waiting_expands.append(dict(
+                        job=job, decision=decision, decide_s=decide_s,
+                        since=self.now))
+                    self._push(self.now + self.config.expand_timeout_s,
+                               "expand_timeout", job.job_id, self.now)
+                    self._push(self._next_check_time(job), "check",
+                               job.job_id)
+                    return
+                self._apply(job, decision, decide_s, pause_decide=False)
+            # …and schedule the next decision concurrently (zero job cost).
+            decision, decide_s = self._decide(job)
+            if decision.action is Action.NO_ACTION:
+                self.actions.append(ActionRecord(
+                    self.now, job.job_id, "no_action", decide_s, 0.0,
+                    job.nodes, job.nodes, reason=decision.reason))
+            else:
+                self._pending_async[job.job_id] = (decision, decide_s)
+        else:
+            decision, decide_s = self._decide(job)
+            self._apply(job, decision, decide_s)
+        if job.state is JobState.RUNNING:
+            self._push(self._next_check_time(job), "check", job.job_id)
+
+    # -- events ------------------------------------------------------------------
+
+    def _on_arrival(self, job: Job):
+        self._scheduler_pass()
+
+    def _on_complete(self, job: Job, version: int):
+        if job.state is not JobState.RUNNING or \
+                version != job.completion_version:
+            return
+        self._advance(job)
+        if job.work_done < job.work - 1e-9:
+            self._schedule_completion(job)
+            return
+        job.state = JobState.COMPLETED
+        job.end_time = self.now
+        job.record_nodes(self.now)
+        self.cluster.release(job.job_id)
+        self._completed += 1
+        self._pending_async.pop(job.job_id, None)
+        self._snapshot()
+        self._scheduler_pass()
+
+    def _on_expand_timeout(self, job_id: int, since: float):
+        for w in list(self._waiting_expands):
+            if w["job"].job_id == job_id and w["since"] == since:
+                self._waiting_expands.remove(w)
+                job = w["job"]
+                self.cluster.release(-(job_id + 1))   # drop RJ reservation
+                waited = self.now - since
+                self.actions.append(ActionRecord(
+                    self.now, job_id, "expand", w["decide_s"], waited,
+                    job.nodes, job.nodes, timed_out=True,
+                    reason="rj-timeout"))
+                job.paused_until = max(job.paused_until, self.now)
+                job.last_progress_t = job.paused_until
+                self._schedule_completion(job)
+                self._scheduler_pass()
+
+    def _on_failure(self, node: int):
+        owner = self.cluster.fail_node(node)
+        self.cluster.num_nodes -= 1
+        if owner is None:
+            self._snapshot()
+            return
+        job = next(j for j in self.jobs if j.job_id == owner)
+        self._advance(job)
+        job.work_done = self._ckpt_work.get(job.job_id, 0.0)  # ckpt restore
+        survivors = self.cluster.allocation(job.job_id)
+        if job.malleable and survivors >= self._app(job).min_nodes:
+            # Shrink-to-survivors: largest factor-consistent size that fits.
+            new = job.nodes
+            while new > survivors or (new != survivors and
+                                      new > self._app(job).min_nodes):
+                if new % job.factor or new // job.factor < 1:
+                    break
+                new //= job.factor
+                if new <= survivors:
+                    break
+            new = max(min(new, survivors), 1)
+            self.cluster.resize(job.job_id, new)
+            resize_s = self.config.cost.resize_time(
+                job.nodes, new, self._app(job).data_bytes)
+            self._pause(job, resize_s + 5.0)   # restore overhead
+            job.nodes = new
+            job.record_nodes(self.now)
+            self.actions.append(ActionRecord(
+                self.now, job.job_id, "failure_shrink", 0.0, resize_s,
+                survivors + 1, new, reason=f"node{node}-failed"))
+            self._schedule_completion(job)
+        else:
+            # Rigid job: kill and requeue (checkpoint restart).
+            self.cluster.release(job.job_id)
+            job.state = JobState.PENDING
+            job.nodes = 0
+            job.completion_version += 1
+            job.record_nodes(self.now)
+            self.actions.append(ActionRecord(
+                self.now, job.job_id, "failure_requeue", 0.0, 0.0,
+                survivors + 1, 0, reason=f"node{node}-failed"))
+        self._snapshot()
+        self._scheduler_pass()
+
+    def _on_straggler(self, node: int, slowdown: float):
+        owner = self.cluster.set_straggler(node, slowdown)
+        if owner is not None:
+            self._push(self.now + self.config.straggler_scan_s,
+                       "straggler_scan", owner)
+
+    def _on_straggler_scan(self, job_id: int):
+        job = next((j for j in self.jobs if j.job_id == job_id), None)
+        if job is None or job.state is not JobState.RUNNING:
+            return
+        if self.cluster.job_rate_factor(job_id) >= \
+                self.config.straggler_threshold:
+            return
+        self._advance(job)
+        if self.cluster.swap_straggler(job_id):
+            app = self._app(job)
+            migrate_s = self.config.cost.resize_time(
+                job.nodes, max(job.nodes // 2, 1),
+                app.data_bytes // max(job.nodes, 1))
+            self._pause(job, migrate_s)
+            self.actions.append(ActionRecord(
+                self.now, job_id, "straggler_migrate", 0.0, migrate_s,
+                job.nodes, job.nodes, reason="slice-migration"))
+            self._schedule_completion(job)
+        else:
+            self._push(self.now + self.config.straggler_scan_s,
+                       "straggler_scan", job_id)
+
+    # -- main loop ------------------------------------------------------------------
+
+    def run(self) -> SimReport:
+        wall0 = _time.perf_counter()
+        for job in self.jobs:
+            if not self.config.flexible:
+                job.malleable = False
+            self._push(job.submit_time, "arrival", job.job_id)
+        for t, node in self.config.failures:
+            self._push(t, "failure", node)
+        for t, node, slow in self.config.stragglers:
+            self._push(t, "straggler", node, slow)
+        by_id = {j.job_id: j for j in self.jobs}
+        guard = 0
+        while self._heap:
+            guard += 1
+            if guard > 5_000_000:
+                raise RuntimeError("simulator runaway")
+            t, _, kind, payload = heapq.heappop(self._heap)
+            self.now = t
+            if kind == "arrival":
+                self._on_arrival(by_id[payload[0]])
+            elif kind == "complete":
+                self._on_complete(by_id[payload[0]], payload[1])
+            elif kind == "check":
+                self._on_check(by_id[payload[0]])
+            elif kind == "expand_timeout":
+                self._on_expand_timeout(*payload)
+            elif kind == "failure":
+                self._on_failure(payload[0])
+            elif kind == "straggler":
+                self._on_straggler(*payload)
+            elif kind == "straggler_scan":
+                self._on_straggler_scan(payload[0])
+        makespan = max((j.end_time for j in self.jobs
+                        if j.end_time > 0), default=0.0)
+        rep = SimReport(self.config, self.jobs, self.actions, self.timeline,
+                        makespan, _time.perf_counter() - wall0)
+        rep.policy_wall_s = list(self._wall_decide_s)
+        return rep

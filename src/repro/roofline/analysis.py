@@ -1,0 +1,134 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Targets TPU v5e: 197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link
+ICI.  ``cost_analysis`` supplies per-device HLO FLOPs / bytes accessed;
+collective bytes are parsed from the post-SPMD optimized HLO (summing the
+result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute).  Terms follow the assignment:
+
+    compute    = HLO_FLOPs / (chips * peak)
+    memory     = HLO_bytes / (chips * hbm_bw)
+    collective = collective_bytes / (chips * link_bw)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+HW = {
+    "chip_bf16_flops": 197e12,
+    "hbm_bw": 819e9,
+    "ici_link_bw": 50e9,
+    "hbm_per_chip": 16e9,
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        size = _DTYPE_BYTES.get(dtype)
+        if size is None or size == 0:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * size
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, int]:
+    """Per-device collective bytes by op kind (result-shape bytes)."""
+    out: Dict[str, int] = {}
+    seen_done = set()
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        # async pairs appear as -start/-done; count once via -start only
+        tail = hlo_text[m.end() - 1:m.end() + 4]
+        del tail
+        line_start = hlo_text.rfind("\n", 0, m.start()) + 1
+        line = hlo_text[line_start:hlo_text.find("\n", m.start())]
+        if f"{kind}-done" in line:
+            seen_done.add(kind)
+            continue
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    hlo_flops_global: float
+    hlo_bytes_global: float
+    coll_bytes_global: float
+    model_flops: float
+    useful_ratio: float     # MODEL_FLOPS / HLO_FLOPs
+    step_s: float           # max of the three terms (no-overlap lower bound)
+    mfu: float              # MODEL_FLOPS / (chips * peak * step_s)
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(*, per_device_flops: float, per_device_bytes: float,
+                   per_device_coll_bytes: float, chips: int,
+                   model_flops: float) -> Roofline:
+    peak = HW["chip_bf16_flops"]
+    compute_s = per_device_flops / peak
+    memory_s = per_device_bytes / HW["hbm_bw"]
+    collective_s = per_device_coll_bytes / HW["ici_link_bw"]
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    gf = per_device_flops * chips
+    return Roofline(
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant,
+        hlo_flops_global=gf,
+        hlo_bytes_global=per_device_bytes * chips,
+        coll_bytes_global=per_device_coll_bytes * chips,
+        model_flops=model_flops,
+        useful_ratio=(model_flops / gf) if gf else 0.0,
+        step_s=step_s,
+        mfu=(model_flops / (chips * peak * step_s)) if step_s else 0.0)
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    """Extract per-device flops & bytes from compiled.cost_analysis()."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    return {"flops": flops, "bytes": bytes_accessed, "raw_keys": len(ca)}
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        out[k] = float(getattr(ma, k, 0) or 0)
+    out["total_hbm_bytes"] = (out["argument_size_in_bytes"]
+                              + out["output_size_in_bytes"]
+                              + out["temp_size_in_bytes"]
+                              - out["alias_size_in_bytes"])
+    return out

@@ -1,0 +1,5 @@
+"""Workload generation (Feitelson model, Poisson arrivals)."""
+from repro.workload.feitelson import (feitelson_sizes, make_workload,
+                                      poisson_arrivals)
+
+__all__ = ["feitelson_sizes", "make_workload", "poisson_arrivals"]

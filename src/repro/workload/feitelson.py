@@ -1,0 +1,73 @@
+"""Workload generation — Feitelson's statistical model (paper §7.1).
+
+The paper generates workloads with Feitelson's rigid-job model [4],
+customizing two knobs: the number of jobs and the inter-arrival times
+("Poisson distribution of factor 10" — exponential inter-arrivals with a
+10-second mean scale, which avoids bursts while keeping a realistic arrival
+pattern).  Each job instantiates one of the three applications (CG, Jacobi,
+N-body) chosen by a randomly-sorted sequence with a fixed seed; jobs are
+submitted with their *maximum* size (the user-preferred fast-execution
+scenario, §7.5).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.rms.costmodel import PAPER_APPS, AppModel
+from repro.rms.job import Job
+
+
+def feitelson_sizes(rng: np.random.Generator, n: int, max_size: int
+                    ) -> np.ndarray:
+    """Feitelson'96 size model: sizes biased to small values & powers of two.
+
+    Used for synthetic rigid workloads (the paper's non-app experiments);
+    the throughput workloads take sizes from the applications' Table-1
+    maxima instead.
+    """
+    log_max = int(np.log2(max_size))
+    # Harmonic-ish distribution over log2 sizes, with extra mass on serial.
+    probs = np.array([1.0 / (k + 1.5) for k in range(log_max + 1)])
+    probs /= probs.sum()
+    k = rng.choice(log_max + 1, size=n, p=probs)
+    sizes = 2 ** k
+    # Feitelson: ~30% of jobs perturb away from an exact power of two.
+    jitter = rng.random(n) < 0.3
+    sizes = np.where(jitter & (sizes > 1),
+                     np.maximum(1, sizes - rng.integers(0, 3, n)), sizes)
+    return np.minimum(sizes, max_size)
+
+
+def poisson_arrivals(rng: np.random.Generator, n: int,
+                     scale_s: float = 10.0) -> np.ndarray:
+    """Exponential inter-arrivals (Poisson process), mean ``scale_s``."""
+    gaps = rng.exponential(scale_s, size=n)
+    t = np.cumsum(gaps)
+    t[0] = 0.0
+    return t
+
+
+def make_workload(num_jobs: int, *, seed: int = 7,
+                  apps: Optional[Dict[str, AppModel]] = None,
+                  app_names: Sequence[str] = ("cg", "jacobi", "nbody"),
+                  arrival_scale_s: float = 10.0,
+                  malleable: bool = True) -> List[Job]:
+    """The paper's throughput workloads (§7.5): randomly-sorted app jobs,
+    fixed seed, Poisson arrivals, launched at their maximum size."""
+    rng = np.random.default_rng(seed)
+    apps = dict(PAPER_APPS if apps is None else apps)
+    arrivals = poisson_arrivals(rng, num_jobs, arrival_scale_s)
+    choices = rng.choice(len(app_names), size=num_jobs)
+    jobs = []
+    for i in range(num_jobs):
+        app = apps[app_names[choices[i]]]
+        jobs.append(Job(
+            job_id=i, app=app.name, submit_time=float(arrivals[i]),
+            work=float(app.iterations),
+            min_nodes=app.min_nodes, max_nodes=app.max_nodes,
+            preferred=app.preferred, factor=2, malleable=malleable,
+            check_period_s=app.check_period_s,
+            requested_nodes=app.max_nodes, data_bytes=app.data_bytes))
+    return jobs

@@ -1,0 +1,15 @@
+"""Test fixtures. Tests must see the real single CPU device — only
+launch/dryrun.py sets the 512-device placeholder flag."""
+import os
+
+import jax
+import pytest
+
+assert "xla_force_host_platform_device_count" not in \
+    os.environ.get("XLA_FLAGS", ""), \
+    "tests must not run with placeholder devices"
+
+
+@pytest.fixture(scope="session")
+def single_device():
+    return jax.devices()[0]

@@ -1,0 +1,58 @@
+"""Checkpoint store: roundtrip, atomicity, GC, async, elastic restore."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointStore
+
+
+@pytest.fixture
+def state():
+    return {"params": {"w": jnp.arange(12.0).reshape(3, 4),
+                       "b": jnp.ones((4,), jnp.bfloat16)},
+            "step": jnp.int32(7)}
+
+
+def test_roundtrip(tmp_path, state):
+    store = CheckpointStore(tmp_path)
+    store.save(7, state)
+    out = store.restore(7, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_latest_and_gc(tmp_path, state):
+    store = CheckpointStore(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        store.save(s, state)
+    assert store.latest_step() == 4
+    assert len(list(tmp_path.glob("ckpt_*"))) == 2
+
+
+def test_async_save(tmp_path, state):
+    store = CheckpointStore(tmp_path)
+    store.save_async(5, state)
+    store.wait()
+    assert store.latest_step() == 5
+    out = store.restore(5, state)
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+
+
+def test_no_partial_files_after_save(tmp_path, state):
+    store = CheckpointStore(tmp_path)
+    store.save(1, state)
+    assert not list(tmp_path.glob("*.tmp"))
+
+
+def test_elastic_restore_with_shardings(tmp_path, state):
+    store = CheckpointStore(tmp_path)
+    store.save(1, state)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = jax.tree.map(
+        lambda _: jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec()), state)
+    out = store.restore(1, state, sh)
+    assert out["params"]["w"].sharding.mesh.shape["data"] == 1

@@ -1,0 +1,71 @@
+"""DMR API semantics: sync/async, inhibitor, expand-timeout abort (§5.1)."""
+import time
+
+from repro.core import DMR, Action, Decision
+
+
+class FakeRMS:
+    def __init__(self, decisions, grant=True, wait_s=0.0):
+        self.decisions = list(decisions)
+        self.grant = grant
+        self.wait_s = wait_s
+        self.queries = 0
+
+    def request_reconfig(self, job_id, *, current, minimum, maximum,
+                         factor, preferred):
+        self.queries += 1
+        if self.decisions:
+            return self.decisions.pop(0)
+        return Decision(Action.NO_ACTION, current)
+
+    def confirm_resize(self, job_id, decision, timeout_s):
+        return self.grant, self.wait_s
+
+
+def test_sync_expand_applies():
+    rms = FakeRMS([Decision(Action.EXPAND, 8)])
+    dmr = DMR(rms, 0, current_slices=4)
+    action, n, handler = dmr.check_status(minimum=1, maximum=16, factor=2)
+    assert action is Action.EXPAND and n == 8
+    assert handler.old_slices == 4 and handler.new_slices == 8
+    assert dmr.current_slices == 8
+
+
+def test_expand_timeout_aborts():
+    """§5.2.1: RJ cancelled on timeout; action aborted."""
+    rms = FakeRMS([Decision(Action.EXPAND, 8)], grant=False, wait_s=30.0)
+    dmr = DMR(rms, 0, current_slices=4)
+    action, n, handler = dmr.check_status(minimum=1, maximum=16)
+    assert action is Action.NO_ACTION and n == 4
+    assert dmr.current_slices == 4
+    assert dmr.history[-1].timed_out
+
+
+def test_inhibitor_suppresses_calls():
+    rms = FakeRMS([Decision(Action.SHRINK, 2),
+                   Decision(Action.EXPAND, 8)])
+    dmr = DMR(rms, 0, current_slices=4, inhibitor_s=100.0)
+    dmr.check_status(minimum=1, maximum=16)
+    assert rms.queries == 1
+    action, n, _ = dmr.check_status(minimum=1, maximum=16)
+    assert action is Action.NO_ACTION     # inhibited, no RMS contact
+    assert rms.queries == 1
+
+
+def test_async_returns_previous_decision():
+    rms = FakeRMS([Decision(Action.SHRINK, 2)])
+    dmr = DMR(rms, 0, current_slices=4)
+    a1, n1, _ = dmr.icheck_status(minimum=1, maximum=16)
+    assert a1 is Action.NO_ACTION          # first call: nothing ready yet
+    time.sleep(0.2)                        # let the background query land
+    a2, n2, _ = dmr.icheck_status(minimum=1, maximum=16)
+    assert a2 is Action.SHRINK and n2 == 2
+    dmr.close()
+
+
+def test_history_records_all_actions():
+    rms = FakeRMS([Decision(Action.SHRINK, 2), Decision(Action.EXPAND, 4)])
+    dmr = DMR(rms, 0, current_slices=4)
+    dmr.check_status(minimum=1, maximum=16)
+    dmr.check_status(minimum=1, maximum=16)
+    assert [h.action for h in dmr.history] == [Action.SHRINK, Action.EXPAND]

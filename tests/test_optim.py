@@ -1,0 +1,68 @@
+"""Optimizer: AdamW vs numpy reference, schedule, clipping, compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (AdamWConfig, apply_updates, global_norm, init_state,
+                         schedule)
+from repro.optim.compression import _dequantize, _quantize
+
+
+def test_adamw_matches_numpy_reference():
+    cfg = AdamWConfig(lr=0.1, beta1=0.9, beta2=0.99, eps=1e-8,
+                      weight_decay=0.0, clip_norm=None, warmup_steps=0,
+                      total_steps=1000, min_lr_ratio=1.0)
+    p = {"w": jnp.array([[1.0, -2.0], [0.5, 3.0]])}
+    g = {"w": jnp.array([[0.1, 0.2], [-0.3, 0.4]])}
+    st_ = init_state(p)
+    new_p, st1, _ = apply_updates(cfg, p, g, st_)
+    # numpy reference
+    mu = 0.1 * np.asarray(g["w"])
+    nu = 0.01 * np.asarray(g["w"]) ** 2
+    mh, nh = mu / (1 - 0.9), nu / (1 - 0.99)
+    ref = np.asarray(p["w"]) - 0.1 * mh / (np.sqrt(nh) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), ref, rtol=1e-5)
+    assert int(st1["step"]) == 1
+
+
+def test_weight_decay_only_on_matrices():
+    cfg = AdamWConfig(lr=0.1, weight_decay=1.0, clip_norm=None,
+                      warmup_steps=0, min_lr_ratio=1.0)
+    p = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+    g = {"w": jnp.zeros((2, 2)), "b": jnp.zeros((2,))}
+    new_p, _, _ = apply_updates(cfg, p, g, init_state(p))
+    assert float(jnp.abs(new_p["w"] - 1.0).max()) > 0   # decayed
+    np.testing.assert_allclose(np.asarray(new_p["b"]), 1.0)  # not decayed
+
+
+def test_clipping_bounds_update():
+    cfg = AdamWConfig(clip_norm=1.0, warmup_steps=0)
+    p = {"w": jnp.zeros((4,))}
+    g = {"w": jnp.full((4,), 100.0)}
+    _, _, metrics = apply_updates(cfg, p, g, init_state(p))
+    assert float(metrics["grad_norm"]) == 200.0
+
+
+def test_schedule_warmup_and_cosine():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    assert float(schedule(cfg, jnp.int32(0))) == 0.0
+    assert abs(float(schedule(cfg, jnp.int32(10))) - 1.0) < 1e-6
+    assert abs(float(schedule(cfg, jnp.int32(100))) - 0.1) < 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 2000), st.floats(0.01, 100.0))
+def test_quantize_roundtrip_bounded_error(n, scale):
+    x = (np.random.RandomState(n).randn(n) * scale).astype(np.float32)
+    q, s = _quantize(jnp.asarray(x))
+    out = np.asarray(_dequantize(q, s, (n,), n))
+    # per-block max-abs scaling bounds error by scale/127 per element
+    blocks = np.abs(x).reshape(-1)
+    assert np.abs(out - x).max() <= (np.abs(x).max() / 127.0) + 1e-6
+
+
+def test_global_norm():
+    t = {"a": jnp.ones((4,)), "b": jnp.full((3,), 2.0)}
+    assert abs(float(global_norm(t)) - np.sqrt(4 + 12)) < 1e-6

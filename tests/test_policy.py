@@ -1,0 +1,120 @@
+"""DMR reconfiguration policy (paper §4) unit tests."""
+import pytest
+
+from repro.core.actions import Action
+from repro.rms.cluster import Cluster
+from repro.rms.job import Job, JobState
+from repro.rms.policy import ReconfigPolicy, factor_sizes
+
+
+def make_job(jid, nodes, requested=None, state=JobState.RUNNING):
+    j = Job(job_id=jid, app="cg", submit_time=0.0, work=100,
+            min_nodes=2, max_nodes=32, preferred=8,
+            requested_nodes=requested or nodes)
+    j.state = state
+    j.nodes = nodes
+    return j
+
+
+def cluster_with(jobs, num_nodes=64):
+    c = Cluster(num_nodes)
+    for j in jobs:
+        if j.state is JobState.RUNNING:
+            c.allocate(j.job_id, j.nodes)
+    return c
+
+
+def test_factor_sizes_single_step():
+    # one factor step per action (Fig. 3 measures exactly these pairs)
+    assert factor_sizes(8, 2, 1, 64) == [4, 16]
+    assert factor_sizes(1, 2, 1, 64) == [2]
+    assert factor_sizes(64, 2, 1, 64) == [32]
+    assert factor_sizes(9, 2, 1, 64) == [18]  # 9 not divisible by 2
+
+
+def test_mode1_requested_expand():
+    pol = ReconfigPolicy()
+    job = make_job(0, 8)
+    c = cluster_with([job])
+    d = pol.decide(c, [], job, minimum=16, maximum=32, factor=2)
+    assert d.action is Action.EXPAND and d.new_slices == 16
+
+
+def test_mode1_requested_expand_denied_when_full():
+    pol = ReconfigPolicy()
+    job = make_job(0, 8)
+    other = make_job(1, 56)
+    c = cluster_with([job, other])
+    d = pol.decide(c, [], job, minimum=16, maximum=32, factor=2)
+    assert d.action is Action.NO_ACTION
+
+
+def test_mode1_requested_shrink():
+    pol = ReconfigPolicy()
+    job = make_job(0, 16)
+    c = cluster_with([job])
+    d = pol.decide(c, [], job, minimum=2, maximum=8, factor=2)
+    assert d.action is Action.SHRINK and d.new_slices == 8
+
+
+def test_mode2_at_preferred_no_action_under_queue():
+    pol = ReconfigPolicy()
+    job = make_job(0, 8)
+    queued = make_job(1, 0, requested=32, state=JobState.PENDING)
+    c = cluster_with([job])
+    d = pol.decide(c, [queued], job, minimum=2, maximum=32, factor=2,
+                   preferred=8)
+    assert d.action is Action.NO_ACTION
+    assert d.reason == "at-preferred"
+
+
+def test_mode2_empty_queue_grows_to_max():
+    pol = ReconfigPolicy()
+    job = make_job(0, 8)
+    c = cluster_with([job])
+    d = pol.decide(c, [], job, minimum=2, maximum=32, factor=2, preferred=8)
+    assert d.action is Action.EXPAND and d.new_slices == 16
+
+
+def test_mode2_shrinks_toward_preferred_under_queue():
+    pol = ReconfigPolicy()
+    job = make_job(0, 32)
+    queued = make_job(1, 0, requested=32, state=JobState.PENDING)
+    c = cluster_with([job])
+    d = pol.decide(c, [queued], job, minimum=2, maximum=32, factor=2,
+                   preferred=8)
+    assert d.action is Action.SHRINK and d.new_slices == 16  # one step
+
+
+def test_mode3_wide_expand_only_if_queue_cannot_use():
+    pol = ReconfigPolicy()
+    job = make_job(0, 16)
+    # queued job fits in free nodes -> no expansion
+    small = make_job(1, 0, requested=16, state=JobState.PENDING)
+    c = cluster_with([job])  # 48 free
+    d = pol.decide(c, [small], job, minimum=2, maximum=32, factor=2)
+    assert d.action is not Action.EXPAND
+    # queued job too big for free nodes -> expansion allowed
+    big = make_job(2, 0, requested=64, state=JobState.PENDING)
+    d = pol.decide(c, [big], job, minimum=2, maximum=32, factor=2)
+    assert d.action is Action.EXPAND
+
+
+def test_mode3_wide_shrink_boosts_trigger_job():
+    pol = ReconfigPolicy()
+    a = make_job(0, 32)
+    b = make_job(1, 24)
+    queued = make_job(2, 0, requested=16, state=JobState.PENDING)
+    c = cluster_with([a, b])  # 8 free; shrinking a 32->16 frees 16
+    d = pol.decide(c, [queued], a, minimum=2, maximum=32, factor=2)
+    assert d.action is Action.SHRINK and d.new_slices == 16
+    assert d.boost_job_id == 2
+
+
+def test_expansion_respects_free_nodes():
+    pol = ReconfigPolicy()
+    job = make_job(0, 32)
+    other = make_job(1, 24)
+    c = cluster_with([job, other])  # 8 free < 32 needed for 32->64
+    d = pol.decide(c, [], job, minimum=2, maximum=64, factor=2)
+    assert d.action is Action.NO_ACTION

@@ -1,0 +1,58 @@
+"""Factor-based redistribution plans (Listing 3 / Fig. 2) + cost model."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import expand_plan, shrink_plan, transfer_time_s
+
+sizes = st.sampled_from([1, 2, 4, 8, 16, 32, 64])
+
+
+@settings(max_examples=60, deadline=None)
+@given(sizes, st.integers(1, 3), st.integers(10, 30))
+def test_expand_plan_conserves_bytes(p, log_f, log_bytes):
+    q = p * (2 ** log_f)
+    nbytes = (2 ** log_bytes)
+    plan = expand_plan(p, q, nbytes)
+    chunk = nbytes // q
+    assert sum(t.nbytes for t in plan) == chunk * q
+    # every destination receives exactly one chunk
+    dsts = sorted(t.dst for t in plan)
+    assert dsts == list(range(q))
+
+
+@settings(max_examples=60, deadline=None)
+@given(sizes, st.integers(1, 3), st.integers(10, 30))
+def test_shrink_plan_folds_groups(p, log_f, log_bytes):
+    f = 2 ** log_f
+    if p % f:
+        return
+    q = p // f
+    if q < 1:
+        return
+    plan = shrink_plan(p, q, 2 ** log_bytes)
+    # Listing 3: receiver of group g is rank g*f + f-1, continuing as rank g
+    for t in plan:
+        assert t.dst == t.src // f
+        if t.local:
+            assert t.src % f == f - 1
+
+
+def test_expand_reuses_original_nodes():
+    plan = expand_plan(4, 8, 1024)
+    local = [t for t in plan if t.local]
+    assert len(local) == 4          # each old rank keeps one chunk
+
+
+def test_more_participants_faster():
+    """Fig. 3b: more processes involved => shorter resize."""
+    t_small = transfer_time_s(expand_plan(1, 2, 1 << 30), link_bw=5e9)
+    t_large = transfer_time_s(expand_plan(32, 64, 1 << 30), link_bw=5e9)
+    assert t_large < t_small
+
+
+def test_shrink_sync_overhead():
+    """Shrinks pay synchronization per participant (paper §7.3)."""
+    base = transfer_time_s(shrink_plan(64, 32, 1 << 30), link_bw=5e9)
+    sync = transfer_time_s(shrink_plan(64, 32, 1 << 30), link_bw=5e9,
+                           sync_s_per_participant=0.004)
+    assert sync > base

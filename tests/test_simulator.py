@@ -1,0 +1,143 @@
+"""Discrete-event simulator invariants + paper-claim validation."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.rms import (ClusterSimulator, PAPER_APPS, SimConfig)
+from repro.rms.job import JobState
+from repro.workload import make_workload
+
+WIDE = {k: dataclasses.replace(v, preferred=None)
+        for k, v in PAPER_APPS.items()}
+
+
+def run(n, flexible, sched="sync", apps=None, **kw):
+    jobs = make_workload(n, seed=7, apps=apps)
+    cfg = SimConfig(num_nodes=64, flexible=flexible, scheduling=sched, **kw)
+    return ClusterSimulator(jobs, cfg, apps=apps).run()
+
+
+@pytest.fixture(scope="module")
+def runs():
+    return {
+        "fixed": run(50, False),
+        "flex": run(50, True),
+        "async": run(50, True, "async"),
+    }
+
+
+def test_all_jobs_complete(runs):
+    for rep in runs.values():
+        assert all(j.state is JobState.COMPLETED for j in rep.jobs)
+
+
+def test_no_overallocation(runs):
+    for rep in runs.values():
+        assert max(e[1] for e in rep.timeline) <= rep.config.num_nodes
+
+
+def test_allocation_never_negative(runs):
+    for rep in runs.values():
+        assert min(e[1] for e in rep.timeline) >= 0
+
+
+def test_wait_exec_completion_consistent(runs):
+    for rep in runs.values():
+        for j in rep.jobs:
+            assert j.wait_time >= 0
+            assert j.exec_time > 0
+            assert abs(j.completion_time
+                       - (j.wait_time + j.exec_time)) < 1e-6
+
+
+def test_flexible_improves_completion(runs):
+    """Paper headline: flexible workloads complete earlier (Fig. 4)."""
+    _, _, c_fixed = runs["fixed"].averages()
+    _, _, c_flex = runs["flex"].averages()
+    assert c_flex < c_fixed
+
+
+def test_flexible_reduces_waiting(runs):
+    w_fixed, _, _ = runs["fixed"].averages()
+    w_flex, _, _ = runs["flex"].averages()
+    assert w_flex < w_fixed
+
+
+def test_flexible_increases_exec(runs):
+    """Shrunk jobs run slower (paper §7.4: negative execution gain)."""
+    _, e_fixed, _ = runs["fixed"].averages()
+    _, e_flex, _ = runs["flex"].averages()
+    assert e_flex > e_fixed
+
+
+def test_fixed_jobs_never_resize(runs):
+    assert not runs["fixed"].actions
+    for j in runs["fixed"].jobs:
+        sizes = {n for _, n in j.nodes_history if n > 0}
+        assert len(sizes) == 1
+
+
+def test_flexible_actions_logged(runs):
+    kinds = {a.action for a in runs["flex"].actions}
+    assert "shrink" in kinds
+    assert all(a.decide_s >= 0 for a in runs["flex"].actions)
+
+
+def test_async_timeout_pathology():
+    """Table 2: async expands wait with a timeout ceiling (~40s)."""
+    rep = run(200, True, "async", apps=WIDE)
+    expands = [a for a in rep.actions if a.action == "expand"]
+    assert expands
+    assert max(a.apply_s for a in expands) <= rep.config.expand_timeout_s \
+        + 1.0
+    assert any(a.timed_out for a in rep.actions)
+
+
+def test_sync_expand_has_no_waits():
+    rep = run(200, True, "sync", apps=WIDE)
+    expands = [a for a in rep.actions if a.action == "expand"
+               and not a.timed_out]
+    assert all(a.apply_s < 5.0 for a in expands)
+
+
+def test_utilization_definition():
+    rep = run(50, False)
+    u, _ = rep.utilization()
+    assert 0 < u <= 100.0
+
+
+def test_node_failure_malleable_shrinks():
+    jobs = make_workload(8, seed=3)
+    cfg = SimConfig(num_nodes=64, flexible=True,
+                    failures=((100.0, 0),))
+    rep = ClusterSimulator(jobs, cfg).run()
+    assert any(a.action in ("failure_shrink", "failure_requeue")
+               for a in rep.actions)
+    assert all(j.state is JobState.COMPLETED for j in rep.jobs)
+
+
+def test_node_failure_rigid_requeues():
+    jobs = make_workload(8, seed=3, malleable=False)
+    cfg = SimConfig(num_nodes=64, flexible=False,
+                    failures=((100.0, 0),))
+    rep = ClusterSimulator(jobs, cfg).run()
+    assert all(j.state is JobState.COMPLETED for j in rep.jobs)
+
+
+def test_straggler_migration():
+    jobs = make_workload(4, seed=3)
+    cfg = SimConfig(num_nodes=64, flexible=True,
+                    stragglers=((50.0, 0, 4.0),))
+    rep = ClusterSimulator(jobs, cfg).run()
+    assert all(j.state is JobState.COMPLETED for j in rep.jobs)
+    # either migrated or the slow node was free
+    assert any(a.action == "straggler_migrate" for a in rep.actions) or \
+        rep.makespan > 0
+
+
+def test_deterministic_given_seed():
+    a = run(30, True)
+    b = run(30, True)
+    assert a.makespan == b.makespan
+    assert len(a.actions) == len(b.actions)

@@ -1,0 +1,32 @@
+"""Feitelson workload generator (paper §7.1)."""
+import numpy as np
+
+from repro.workload import feitelson_sizes, make_workload, poisson_arrivals
+
+
+def test_deterministic_given_seed():
+    a = make_workload(20, seed=5)
+    b = make_workload(20, seed=5)
+    assert [j.app for j in a] == [j.app for j in b]
+    assert [j.submit_time for j in a] == [j.submit_time for j in b]
+
+
+def test_arrivals_monotone_and_scaled():
+    rng = np.random.default_rng(0)
+    t = poisson_arrivals(rng, 1000, scale_s=10.0)
+    assert (np.diff(t) >= 0).all()
+    gaps = np.diff(t)
+    assert 5.0 < gaps.mean() < 20.0       # exponential(10) mean
+
+
+def test_jobs_launched_at_maximum():
+    for j in make_workload(30, seed=1):
+        assert j.requested_nodes == j.max_nodes
+
+
+def test_sizes_within_bounds():
+    rng = np.random.default_rng(0)
+    sizes = feitelson_sizes(rng, 500, 32)
+    assert sizes.min() >= 1 and sizes.max() <= 32
+    # biased toward small sizes
+    assert np.median(sizes) <= 8
