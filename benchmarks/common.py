@@ -1,4 +1,9 @@
-"""Shared helpers for the paper-reproduction benchmarks."""
+"""Shared helpers for the paper-reproduction benchmarks.
+
+All benchmarks drive the event-driven engine (``repro.rms.engine``) through
+``ClusterSimulator``; ``run_sim`` exposes the scheduling-policy registry so
+any table can be re-derived under fcfs / easy / conservative / malleable.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -7,7 +12,8 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.rms import ClusterSimulator, PAPER_APPS, SimConfig
+from repro.rms import (ClusterSimulator, PAPER_APPS, SchedulerConfig,
+                       SimConfig)
 from repro.workload import make_workload
 
 WIDE_APPS = {k: dataclasses.replace(v, preferred=None)
@@ -15,11 +21,12 @@ WIDE_APPS = {k: dataclasses.replace(v, preferred=None)
 
 
 def run_sim(n_jobs: int, *, flexible: bool, scheduling: str = "sync",
-            wide: bool = False, seed: int = 7, **kw):
+            wide: bool = False, seed: int = 7, policy: str = "easy", **kw):
     apps = WIDE_APPS if wide else None
     jobs = make_workload(n_jobs, seed=seed, apps=apps)
     cfg = SimConfig(num_nodes=64, flexible=flexible,
-                    scheduling=scheduling, **kw)
+                    scheduling=scheduling,
+                    sched=SchedulerConfig(policy=policy), **kw)
     return ClusterSimulator(jobs, cfg, apps=apps).run()
 
 

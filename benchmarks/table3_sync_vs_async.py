@@ -1,4 +1,8 @@
-"""Table 3: cluster + per-job measures, sync vs async (async dismissal)."""
+"""Table 3: cluster + per-job measures, sync vs async (async dismissal).
+
+Runs on the event-driven engine (``repro.rms.engine``); pass ``policy`` to
+re-derive the table under any registered scheduling policy.
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -18,14 +22,16 @@ def gains(base, rep):
     return np.array(out)
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, policy: str = "easy"):
     n = 100 if quick else 400
     print(f"# Table 3: cluster and job measures of the {n}-job workloads "
-          f"(wide-opt mode)")
+          f"(wide-opt mode, {policy} scheduling policy)")
     print("measure,fixed,sync,async")
-    base = run_sim(n, flexible=False, wide=True)
-    sync = run_sim(n, flexible=True, scheduling="sync", wide=True)
-    asyn = run_sim(n, flexible=True, scheduling="async", wide=True)
+    base = run_sim(n, flexible=False, wide=True, policy=policy)
+    sync = run_sim(n, flexible=True, scheduling="sync", wide=True,
+                   policy=policy)
+    asyn = run_sim(n, flexible=True, scheduling="async", wide=True,
+                   policy=policy)
     u = {k: r.utilization() for k, r in
          (("fixed", base), ("sync", sync), ("async", asyn))}
     print(f"utilization_avg_pct,{u['fixed'][0]:.2f},{u['sync'][0]:.2f},"

@@ -1,19 +1,24 @@
 """Table 4 + Figs. 4/5: throughput evaluation, 50-400 jobs, fixed vs
-flexible (preferred mode, as in the paper's §7.5)."""
+flexible (preferred mode, as in the paper's §7.5).
+
+Runs on the event-driven engine (``repro.rms.engine``); pass ``policy`` to
+re-derive the table under any registered scheduling policy.
+"""
 from __future__ import annotations
 
 from benchmarks.common import run_sim
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, policy: str = "easy"):
     sizes = (50, 100) if quick else (50, 100, 200, 400)
-    print("# Table 4 + Fig4/5: workloads, fixed vs flexible (preferred)")
+    print(f"# Table 4 + Fig4/5: workloads, fixed vs flexible (preferred, "
+          f"{policy} scheduling policy)")
     print("jobs,version,util_rate_pct,job_waiting_s,job_exec_s,"
           "job_completion_s,makespan_s,makespan_gain_pct,wait_gain_pct")
     out = {}
     for n in sizes:
-        base = run_sim(n, flexible=False)
-        flex = run_sim(n, flexible=True)
+        base = run_sim(n, flexible=False, policy=policy)
+        flex = run_sim(n, flexible=True, policy=policy)
         out[n] = (base, flex)
         bw, be, bc = base.averages()
         fw, fe, fc = flex.averages()

@@ -1,19 +1,36 @@
 """The paper's end-to-end scenario: process an adaptive workload.
 
-Runs the same randomly-sorted CG/Jacobi/N-body workload through the RMS
-twice — fixed vs flexible (malleable) — and reports the paper's headline
-measures (Table 4 / Figs. 4-6).
+Runs the same randomly-sorted CG/Jacobi/N-body workload — or any SWF
+trace via ``--trace`` — through the event-driven RMS engine twice, fixed
+vs flexible (malleable), and reports the paper's headline measures
+(Table 4 / Figs. 4-6).
 
   PYTHONPATH=src python examples/workload_sim.py [--jobs 50] [--async]
+      [--policy easy|fcfs|conservative|malleable]
+      [--trace tests/data/sample.swf]
 """
 import argparse
 
-from repro.rms import ClusterSimulator, SimConfig
-from repro.workload import make_workload
+from repro.rms import ClusterSimulator, SchedulerConfig, SimConfig
+from repro.workload import MalleabilityMix, jobs_from_swf, make_workload, \
+    parse_swf
 
 
 def bar(frac, width=40):
     return "#" * int(frac * width)
+
+
+def build_jobs(args):
+    """Returns a factory yielding fresh (jobs, apps) for each run."""
+    if args.trace:
+        trace = parse_swf(args.trace)
+        mix = MalleabilityMix(rigid=0.2, moldable=0.2, malleable=0.6)
+
+        def factory():
+            return jobs_from_swf(trace, num_nodes=args.nodes, mix=mix,
+                                 seed=7)
+        return factory
+    return lambda: (make_workload(args.jobs, seed=7), None)
 
 
 def main():
@@ -21,21 +38,28 @@ def main():
     ap.add_argument("--jobs", type=int, default=50)
     ap.add_argument("--nodes", type=int, default=64)
     ap.add_argument("--async", dest="async_", action="store_true")
+    ap.add_argument("--policy", default="easy",
+                    help="fcfs | easy | conservative | malleable")
+    ap.add_argument("--trace", default=None,
+                    help="replay an SWF trace instead of the synthetic mix")
     args = ap.parse_args()
     sched = "async" if args.async_ else "sync"
+    factory = build_jobs(args)
 
     results = {}
     for flexible in (False, True):
-        jobs = make_workload(args.jobs, seed=7)
+        jobs, apps = factory()
         rep = ClusterSimulator(
             jobs, SimConfig(num_nodes=args.nodes, flexible=flexible,
-                            scheduling=sched)).run()
+                            scheduling=sched,
+                            sched=SchedulerConfig(policy=args.policy)),
+            apps=apps).run()
         results[flexible] = rep
         name = "flexible" if flexible else "fixed"
         w, e, c = rep.averages()
         u, us = rep.utilization()
-        print(f"\n== {name} workload ({args.jobs} jobs, {args.nodes} nodes,"
-              f" {sched}) ==")
+        print(f"\n== {name} workload ({len(jobs)} jobs, {args.nodes} nodes,"
+              f" {sched}, {args.policy}) ==")
         print(f"  makespan          {rep.makespan:10.0f} s")
         print(f"  utilization       {u:7.1f} +- {us:.1f} %")
         print(f"  avg waiting       {w:10.1f} s")

@@ -1,14 +1,23 @@
 """RMS: Slurm-analogue resource manager (cluster, policy, scheduler, sim)."""
 from repro.rms.cluster import Cluster
 from repro.rms.costmodel import PAPER_APPS, AppModel, ReconfigCostModel, lm_app_model
+from repro.rms.engine import (CheckpointTick, Event, ExpandTimeout, JobFinish,
+                              JobSubmit, NodeFail, ReconfigPoint,
+                              SimulationEngine, StragglerOnset, StragglerScan)
 from repro.rms.job import Job, JobState
 from repro.rms.policy import PolicyConfig, ReconfigPolicy, factor_sizes
-from repro.rms.scheduler import MAX_PRIORITY, Scheduler, SchedulerConfig
+from repro.rms.scheduler import (MAX_PRIORITY, POLICY_REGISTRY, Scheduler,
+                                 SchedulerConfig, SchedulingPolicy,
+                                 make_policy, register_policy)
 from repro.rms.simulator import (ActionRecord, ClusterSimulator, SimConfig,
                                  SimReport)
 
 __all__ = ["Cluster", "PAPER_APPS", "AppModel", "ReconfigCostModel",
            "lm_app_model", "Job", "JobState", "PolicyConfig",
            "ReconfigPolicy", "factor_sizes", "MAX_PRIORITY", "Scheduler",
-           "SchedulerConfig", "ActionRecord", "ClusterSimulator",
-           "SimConfig", "SimReport"]
+           "SchedulerConfig", "SchedulingPolicy", "POLICY_REGISTRY",
+           "make_policy", "register_policy", "ActionRecord",
+           "ClusterSimulator", "SimConfig", "SimReport",
+           "SimulationEngine", "Event", "JobSubmit", "JobFinish",
+           "ReconfigPoint", "ExpandTimeout", "NodeFail", "StragglerOnset",
+           "StragglerScan", "CheckpointTick"]

@@ -1,0 +1,165 @@
+"""Event-driven simulation engine — the substrate under the RMS testbed.
+
+The monolithic ``ClusterSimulator`` loop is split into a small, generic
+discrete-event core (this module) plus pluggable handlers registered per
+event *type*.  New scenario classes (preemption, power capping, network
+contention, …) become new :class:`Event` subclasses with their own
+handlers instead of edits to one hard-wired loop.
+
+Event types map onto the source paper as follows:
+
+=================  ==========================================================
+Event              Paper section
+=================  ==========================================================
+``JobSubmit``      §7.1 workload generation — a job enters the RMS queue.
+``JobFinish``      §7.4 metrics — completion bookkeeping (wait/exec/
+                   completion times; invalidated by ``version`` on resize).
+``ReconfigPoint``  §5.2 — the periodic DMR check where the application
+                   contacts the RMS and an EXPAND/SHRINK/NO_ACTION decision
+                   is taken (synchronous or asynchronous, §5.1).
+``ExpandTimeout``  §5.2.1 / Table 2 — the asynchronous resizer-job (RJ)
+                   reservation expires; the pathological async wait ceiling.
+``NodeFail``       beyond-paper fault path: shrink-to-survivors for
+                   malleable jobs, checkpoint requeue for rigid ones (§8's
+                   deployment argument).
+``StragglerOnset`` beyond-paper: a node slows down; gates the whole job.
+``StragglerScan``  beyond-paper: periodic detection + slice migration
+                   (mechanically the §5.2.2 shrink data-fold on one slice).
+``CheckpointTick`` §6 deployment — periodic checkpoint, the restore point
+                   used by the ``NodeFail`` path.
+=================  ==========================================================
+
+Determinism contract: events are dispatched in ``(t, seq)`` order where
+``seq`` is the scheduling sequence number, so two runs that schedule the
+same events in the same order replay identically (tier-1 golden-trace test
+``tests/test_engine_determinism.py`` locks this down).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Callable, Dict, List, Tuple, Type
+
+
+# ---------------------------------------------------------------------------
+# Typed events
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """Base event: ``t`` is the simulation time the event fires at."""
+    t: float
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSubmit(Event):
+    job_id: int
+
+
+@dataclasses.dataclass(frozen=True)
+class JobFinish(Event):
+    job_id: int
+    version: int          # invalidates stale completions after a resize
+
+
+@dataclasses.dataclass(frozen=True)
+class ReconfigPoint(Event):
+    job_id: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpandTimeout(Event):
+    job_id: int
+    since: float          # identifies which pending wait this timeout guards
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeFail(Event):
+    node: int
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerOnset(Event):
+    node: int
+    slowdown: float
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerScan(Event):
+    job_id: int
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointTick(Event):
+    job_id: int
+    epoch: int = 0        # invalidates a chain left over from a prior start
+
+
+Handler = Callable[[Event], None]
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+class SimulationEngine:
+    """Minimal deterministic discrete-event dispatcher.
+
+    Handlers are registered per event type with :meth:`on`; dispatch walks
+    the event's MRO so a handler registered for :class:`Event` observes
+    everything (useful for tracing/monitor plugins).
+    """
+
+    def __init__(self, max_events: int = 5_000_000):
+        self.now = 0.0
+        self.max_events = max_events
+        self._heap: List[Tuple[float, int, Event]] = []
+        self._seq = itertools.count()
+        self._handlers: Dict[Type[Event], List[Handler]] = {}
+        self.dispatched = 0
+
+    # -- registration --------------------------------------------------------
+
+    def on(self, event_type: Type[Event], handler: Handler = None):
+        """Register ``handler`` for ``event_type``; usable as a decorator."""
+        if handler is None:
+            def deco(fn: Handler) -> Handler:
+                self.on(event_type, fn)
+                return fn
+            return deco
+        self._handlers.setdefault(event_type, []).append(handler)
+        return handler
+
+    # -- scheduling ----------------------------------------------------------
+
+    def schedule(self, event: Event) -> None:
+        heapq.heappush(self._heap, (event.t, next(self._seq), event))
+
+    def schedule_at(self, t: float, event_type: Type[Event], **fields) -> None:
+        self.schedule(event_type(t=t, **fields))
+
+    # -- main loop -----------------------------------------------------------
+
+    def _dispatch(self, event: Event) -> None:
+        for klass in type(event).__mro__:
+            if klass is object:
+                break
+            for handler in self._handlers.get(klass, ()):
+                handler(event)
+
+    def step(self) -> bool:
+        """Dispatch the next event; returns False when the heap is empty."""
+        if not self._heap:
+            return False
+        t, _, event = heapq.heappop(self._heap)
+        self.now = t
+        self.dispatched += 1
+        if self.dispatched > self.max_events:
+            raise RuntimeError("simulation runaway: max_events exceeded")
+        self._dispatch(event)
+        return True
+
+    def run(self) -> None:
+        while self.step():
+            pass

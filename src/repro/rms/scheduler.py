@@ -1,39 +1,96 @@
-"""Queue scheduler: multifactor priority + EASY backfill (paper §7.2 setup).
+"""Queue scheduling policies: multifactor priority + a pluggable registry.
 
 The paper configures Slurm with the *backfill* scheduling policy and the
-*multifactor* priority plug-in (defaults).  We implement the same pair:
+*multifactor* priority plug-in (defaults); that pair is the ``"easy"``
+policy below and remains the default.  The registry adds the classic
+alternatives studied in the malleable-scheduling literature (Chadha et al.;
+Zojer et al.) so trace replays can compare them:
 
-- priority = age_weight * age + size_weight * (1 - size/cluster) + boost,
-  where *boost* is the maximum-priority path used for resizer jobs and for
-  queued jobs that triggered a wide-optimization shrink (§4.3).
-- EASY backfill: the head-of-queue job gets a reservation at the earliest
-  time enough nodes free up; lower-priority jobs may start now only if they
-  fit in the spare nodes without delaying that reservation (using runtime
-  estimates).
+- ``fcfs``           strict priority order, no backfill — the head of the
+                     queue blocks everything behind it.
+- ``easy``           EASY backfill: the head job gets a reservation at the
+                     earliest time enough nodes free up; lower-priority jobs
+                     may start now only if they don't delay that reservation
+                     (using runtime estimates).
+- ``conservative``   every queued job gets a reservation; a backfill
+                     candidate must not delay *any* reservation.
+- ``malleable``      EASY variant that knows running malleable jobs can be
+                     shrunk at their next reconfiguration point, so the head
+                     reservation lands earlier and backfill is bolder.
+
+Shared priority: ``age_weight * age + size_weight * (1 - size/cluster)
++ boost`` where *boost* is the maximum-priority path used for resizer jobs
+and for queued jobs that triggered a wide-optimization shrink (§4.3).
+
+Select a policy via ``SchedulerConfig(policy="conservative")`` — reachable
+from ``SimConfig(sched=...)`` — or register new ones with
+``@register_policy("name")``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple, Type
 
 from repro.rms.cluster import Cluster
 from repro.rms.job import Job, JobState
 
 MAX_PRIORITY = 1e12
 
+RuntimeEstimate = Callable[[Job], float]
+
 
 @dataclasses.dataclass
 class SchedulerConfig:
     age_weight: float = 1.0
     size_weight: float = 100.0
-    backfill: bool = True
+    backfill: bool = True          # easy/malleable only: False => no backfill
+    policy: str = "easy"           # key into POLICY_REGISTRY
 
 
-class Scheduler:
-    def __init__(self, cluster: Cluster,
-                 config: SchedulerConfig = SchedulerConfig()):
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+POLICY_REGISTRY: Dict[str, Type["SchedulingPolicy"]] = {}
+
+
+def register_policy(name: str):
+    def deco(cls: Type["SchedulingPolicy"]):
+        cls.name = name
+        POLICY_REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def make_policy(cluster: Cluster, config: SchedulerConfig
+                ) -> "SchedulingPolicy":
+    try:
+        cls = POLICY_REGISTRY[config.policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduling policy {config.policy!r}; "
+            f"registered: {sorted(POLICY_REGISTRY)}") from None
+    return cls(cluster, config)
+
+
+# ---------------------------------------------------------------------------
+# Policies
+# ---------------------------------------------------------------------------
+
+class SchedulingPolicy:
+    """Base: multifactor priority + a `schedule` hook.
+
+    ``schedule`` must not mutate the cluster; the simulator/runtime applies
+    starts so that start-up costs are accounted in one place.
+    """
+
+    name = "base"
+
+    def __init__(self, cluster: Cluster, config: SchedulerConfig):
         self.cluster = cluster
         self.config = config
+
+    # -- priority ------------------------------------------------------------
 
     def priority(self, job: Job, now: float) -> float:
         if job.priority_boost:
@@ -47,22 +104,53 @@ class Scheduler:
         return sorted(pending, key=lambda j: (-self.priority(j, now),
                                               j.submit_time, j.job_id))
 
-    def schedule(self, pending: List[Job], running: List[Job], now: float,
-                 runtime_estimate: Callable[[Job], float]
-                 ) -> List[Tuple[Job, int]]:
-        """Return the list of (job, nodes) to start now.
+    # -- helpers -------------------------------------------------------------
 
-        Does not mutate the cluster; the simulator/runtime applies starts so
-        that start-up costs are accounted in one place.
-        """
+    def _queue(self, pending: List[Job], now: float) -> List[Job]:
+        return self.order([j for j in pending
+                           if j.state is JobState.PENDING], now)
+
+    def _releases(self, running: List[Job], now: float,
+                  runtime_estimate: RuntimeEstimate
+                  ) -> List[Tuple[float, int]]:
+        """(time, nodes) future node releases, soonest first."""
+        return sorted(
+            (now + max(runtime_estimate(j), 0.0), j.nodes)
+            for j in running if j.state is JobState.RUNNING)
+
+    # -- hook ----------------------------------------------------------------
+
+    def schedule(self, pending: List[Job], running: List[Job], now: float,
+                 runtime_estimate: RuntimeEstimate
+                 ) -> List[Tuple[Job, int]]:
+        raise NotImplementedError
+
+
+@register_policy("fcfs")
+class FCFSPolicy(SchedulingPolicy):
+    """Strict priority order; the first job that doesn't fit blocks all."""
+
+    def schedule(self, pending, running, now, runtime_estimate):
         free = self.cluster.free_nodes
-        queue = self.order([j for j in pending
-                            if j.state is JobState.PENDING], now)
+        starts: List[Tuple[Job, int]] = []
+        for job in self._queue(pending, now):
+            if job.requested_nodes > free:
+                break
+            starts.append((job, job.requested_nodes))
+            free -= job.requested_nodes
+        return starts
+
+
+@register_policy("easy")
+class EasyBackfillPolicy(SchedulingPolicy):
+    """EASY backfill (paper §7.2 setup): one reservation for the head job."""
+
+    def schedule(self, pending, running, now, runtime_estimate):
+        free = self.cluster.free_nodes
+        queue = self._queue(pending, now)
         starts: List[Tuple[Job, int]] = []
         if not queue:
             return starts
-        shadow_time: Optional[float] = None
-        shadow_free_at_reservation = 0
         i = 0
         # Head-of-queue jobs start in priority order while they fit.
         while i < len(queue) and queue[i].requested_nodes <= free:
@@ -73,12 +161,10 @@ class Scheduler:
             return starts
         # Reservation for the blocked head: when will enough nodes free up?
         head = queue[i]
-        releases = sorted(
-            (now + max(runtime_estimate(j), 0.0), j.nodes)
-            for j in running if j.state is JobState.RUNNING)
         avail = free
-        shadow_time = None
-        for t, n in releases:
+        shadow_time: Optional[float] = None
+        shadow_free_at_reservation = 0
+        for t, n in self._releases(running, now, runtime_estimate):
             avail += n
             if avail >= head.requested_nodes:
                 shadow_time = t
@@ -97,3 +183,123 @@ class Scheduler:
                 if shadow_time is not None and est_end > shadow_time:
                     shadow_free_at_reservation -= job.requested_nodes
         return starts
+
+
+@register_policy("conservative")
+class ConservativeBackfillPolicy(SchedulingPolicy):
+    """Conservative backfill: no queued job's reservation may be delayed.
+
+    Builds a piecewise node-availability profile from running-job release
+    estimates, reserves every queued job at its earliest feasible slot in
+    priority order, and lets a job start *now* only when `now` is that
+    earliest slot — so nobody leapfrogs anybody's reservation.
+    """
+
+    def schedule(self, pending, running, now, runtime_estimate):
+        queue = self._queue(pending, now)
+        if not queue:
+            return []
+        # profile: sorted list of [time, free_nodes_from_t_onward]
+        profile: List[List[float]] = [[now, float(self.cluster.free_nodes)]]
+        for t, n in self._releases(running, now, runtime_estimate):
+            profile.append([t, profile[-1][1] + n])
+        starts: List[Tuple[Job, int]] = []
+        for job in queue:
+            need = job.requested_nodes
+            dur = max(runtime_estimate(job), 0.0)
+            t0 = self._earliest(profile, need, dur)
+            if t0 is None:
+                # Never fits the foreseeable profile (e.g. request larger
+                # than the cluster): no reservation, nothing carved.
+                continue
+            if t0 <= now:
+                starts.append((job, need))
+            self._carve(profile, t0, t0 + dur, need)
+        return starts
+
+    @staticmethod
+    def _earliest(profile, need: int, dur: float) -> Optional[float]:
+        """Earliest start where `need` nodes stay free for `dur` seconds;
+        None when no such window exists in the profile."""
+        for i, (t0, _) in enumerate(profile):
+            ok = True
+            for t, avail in profile[i:]:
+                if t >= t0 + dur:
+                    break
+                if avail < need:
+                    ok = False
+                    break
+            if ok:
+                return t0
+        return None
+
+    @staticmethod
+    def _carve(profile, t0: float, t1: float, need: int) -> None:
+        """Subtract `need` nodes from the profile on [t0, t1)."""
+        # Split segments at t0 and t1 so subtraction stays piecewise-exact.
+        for t_split in (t0, t1):
+            for i, (t, avail) in enumerate(profile):
+                if t == t_split:
+                    break
+                if t > t_split:
+                    profile.insert(i, [t_split, profile[i - 1][1]])
+                    break
+            else:
+                profile.append([t_split, profile[-1][1]])
+        for seg in profile:
+            if t0 <= seg[0] < t1:
+                seg[1] -= need
+
+
+@register_policy("malleable")
+class MalleableEasyPolicy(EasyBackfillPolicy):
+    """EASY backfill that exploits malleability of *running* jobs.
+
+    A running malleable job can be shrunk by one factor step at its next
+    reconfiguration point (§4.3 wide optimization), so those nodes count as
+    an early release when placing the head reservation.  The reservation
+    lands earlier, backfill windows shrink, and queued jobs start sooner —
+    the scheduler-side half of the paper's productivity argument.
+    """
+
+    def _releases(self, running, now, runtime_estimate):
+        releases: List[Tuple[float, int]] = []
+        for j in running:
+            if j.state is not JobState.RUNNING:
+                continue
+            end = now + max(runtime_estimate(j), 0.0)
+            shrunk = j.nodes // max(j.factor, 2)
+            if j.malleable and j.nodes > shrunk >= max(j.min_nodes, 1):
+                # Split, not duplicate: the shrinkable part frees at the
+                # next reconfig point, only the remainder at end of run.
+                horizon = now + max(j.check_period_s, 1.0)
+                releases.append((horizon, j.nodes - shrunk))
+                releases.append((end, shrunk))
+            else:
+                releases.append((end, j.nodes))
+        return sorted(releases)
+
+
+# ---------------------------------------------------------------------------
+# Facade (back-compat API used by the simulator and runtime)
+# ---------------------------------------------------------------------------
+
+class Scheduler:
+    """Thin facade: owns the policy selected by ``SchedulerConfig.policy``."""
+
+    def __init__(self, cluster: Cluster,
+                 config: SchedulerConfig = SchedulerConfig()):
+        self.cluster = cluster
+        self.config = config
+        self.policy = make_policy(cluster, config)
+
+    def priority(self, job: Job, now: float) -> float:
+        return self.policy.priority(job, now)
+
+    def order(self, pending: List[Job], now: float) -> List[Job]:
+        return self.policy.order(pending, now)
+
+    def schedule(self, pending: List[Job], running: List[Job], now: float,
+                 runtime_estimate: RuntimeEstimate
+                 ) -> List[Tuple[Job, int]]:
+        return self.policy.schedule(pending, running, now, runtime_estimate)

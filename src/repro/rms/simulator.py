@@ -1,9 +1,10 @@
-"""Discrete-event cluster simulator — the paper's §7 testbed.
+"""Cluster simulator — the paper's §7 testbed on the event-driven engine.
 
-Runs a workload of jobs (CG / Jacobi / N-body / FS / elastic-LM) through the
-RMS with either the *fixed* or the *flexible* (malleable) configuration and
-either *synchronous* or *asynchronous* DMR scheduling, reproducing the
-paper's measurements:
+Runs a workload of jobs (CG / Jacobi / N-body / FS / elastic-LM, or SWF
+trace replays via :mod:`repro.workload.swf`) through the RMS with either
+the *fixed* or the *flexible* (malleable) configuration and either
+*synchronous* or *asynchronous* DMR scheduling, reproducing the paper's
+measurements:
 
 - per-action overheads (Table 2, Fig. 3),
 - cluster utilization + per-job wait/exec/completion gains (Table 3),
@@ -13,12 +14,14 @@ paper's measurements:
 Beyond the paper: node-failure and straggler events exercise the
 fault-tolerance paths (shrink-to-survivors, checkpoint restart, slice
 migration) that make the same mechanism deployable at scale.
+
+The discrete-event mechanics live in :mod:`repro.rms.engine`; this module
+registers one handler per event type, so new scenario classes are new
+event types + handlers, not edits to a monolithic loop.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import itertools
 import time as _time
 from typing import Dict, List, Optional, Tuple
 
@@ -27,6 +30,10 @@ import numpy as np
 from repro.core.actions import Action, Decision
 from repro.rms.cluster import Cluster
 from repro.rms.costmodel import PAPER_APPS, AppModel, ReconfigCostModel
+from repro.rms.engine import (CheckpointTick, ExpandTimeout, JobFinish,
+                              JobSubmit, NodeFail, ReconfigPoint,
+                              SimulationEngine, StragglerOnset,
+                              StragglerScan)
 from repro.rms.job import Job, JobState
 from repro.rms.policy import PolicyConfig, ReconfigPolicy
 from repro.rms.scheduler import MAX_PRIORITY, Scheduler, SchedulerConfig
@@ -102,6 +109,8 @@ class SimReport:
 
 
 class ClusterSimulator:
+    """RMS simulation: handlers over a :class:`SimulationEngine`."""
+
     def __init__(self, jobs: List[Job], config: SimConfig = SimConfig(),
                  apps: Optional[Dict[str, AppModel]] = None):
         self.config = config
@@ -111,21 +120,38 @@ class ClusterSimulator:
         self.policy = ReconfigPolicy(config.policy)
         self.scheduler = Scheduler(self.cluster, config.sched)
         self.rng = np.random.default_rng(config.seed)
-        self.now = 0.0
-        self._heap: List[Tuple[float, int, str, tuple]] = []
-        self._seq = itertools.count()
+        self.engine = SimulationEngine()
         self.actions: List[ActionRecord] = []
         self.timeline: List[Tuple[float, int, int, int]] = []
+        self._by_id = {j.job_id: j for j in jobs}
         self._completed = 0
         self._waiting_expands: List[dict] = []   # async stale-grant waits
         self._pending_async: Dict[int, Tuple[Decision, float]] = {}
         self._ckpt_work: Dict[int, float] = {}
+        self._ckpt_epoch: Dict[int, int] = {}    # active tick chain per job
         self._wall_decide_s: List[float] = []
+        self._wire_handlers()
+
+    @property
+    def now(self) -> float:
+        return self.engine.now
 
     # -- plumbing ------------------------------------------------------------
 
-    def _push(self, t: float, kind: str, *payload):
-        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+    def _wire_handlers(self):
+        e = self.engine
+        e.on(JobSubmit, lambda ev: self._on_arrival(self._by_id[ev.job_id]))
+        e.on(JobFinish, lambda ev: self._on_complete(self._by_id[ev.job_id],
+                                                     ev.version))
+        e.on(ReconfigPoint, lambda ev: self._on_check(self._by_id[ev.job_id]))
+        e.on(ExpandTimeout,
+             lambda ev: self._on_expand_timeout(ev.job_id, ev.since))
+        e.on(NodeFail, lambda ev: self._on_failure(ev.node))
+        e.on(StragglerOnset,
+             lambda ev: self._on_straggler(ev.node, ev.slowdown))
+        e.on(StragglerScan, lambda ev: self._on_straggler_scan(ev.job_id))
+        e.on(CheckpointTick,
+             lambda ev: self._on_checkpoint(ev.job_id, ev.epoch))
 
     def _app(self, job: Job) -> AppModel:
         return self.apps[job.app]
@@ -154,7 +180,8 @@ class ClusterSimulator:
         remaining = max(job.work - job.work_done, 0.0)
         t0 = max(self.now, job.paused_until)
         t_end = t0 + remaining / self._rate(job)
-        self._push(t_end, "complete", job.job_id, job.completion_version)
+        self.engine.schedule(JobFinish(t_end, job.job_id,
+                                       job.completion_version))
 
     def _snapshot(self):
         running = sum(1 for j in self.jobs if j.state is JobState.RUNNING)
@@ -191,7 +218,15 @@ class ClusterSimulator:
             self._ckpt_work[job.job_id] = 0.0
             self._schedule_completion(job)
             if self.config.flexible and job.malleable:
-                self._push(self._next_check_time(job), "check", job.job_id)
+                self.engine.schedule(ReconfigPoint(
+                    self._next_check_time(job), job.job_id))
+            if self.config.checkpoint_period_s > 0:
+                # New epoch: a chain surviving a requeue/restart goes stale.
+                epoch = self._ckpt_epoch.get(job.job_id, 0) + 1
+                self._ckpt_epoch[job.job_id] = epoch
+                self.engine.schedule(CheckpointTick(
+                    self.now + self.config.checkpoint_period_s, job.job_id,
+                    epoch))
         if starts:
             self._snapshot()
 
@@ -291,7 +326,8 @@ class ClusterSimulator:
             return
         self._advance(job)
         if any(w["job"].job_id == job.job_id for w in self._waiting_expands):
-            self._push(self._next_check_time(job), "check", job.job_id)
+            self.engine.schedule(ReconfigPoint(self._next_check_time(job),
+                                               job.job_id))
             return
         if self.config.scheduling == "async":
             # Apply the decision scheduled at the previous point…
@@ -306,10 +342,11 @@ class ClusterSimulator:
                     self._waiting_expands.append(dict(
                         job=job, decision=decision, decide_s=decide_s,
                         since=self.now))
-                    self._push(self.now + self.config.expand_timeout_s,
-                               "expand_timeout", job.job_id, self.now)
-                    self._push(self._next_check_time(job), "check",
-                               job.job_id)
+                    self.engine.schedule(ExpandTimeout(
+                        self.now + self.config.expand_timeout_s,
+                        job.job_id, self.now))
+                    self.engine.schedule(ReconfigPoint(
+                        self._next_check_time(job), job.job_id))
                     return
                 self._apply(job, decision, decide_s, pause_decide=False)
             # …and schedule the next decision concurrently (zero job cost).
@@ -324,7 +361,8 @@ class ClusterSimulator:
             decision, decide_s = self._decide(job)
             self._apply(job, decision, decide_s)
         if job.state is JobState.RUNNING:
-            self._push(self._next_check_time(job), "check", job.job_id)
+            self.engine.schedule(ReconfigPoint(self._next_check_time(job),
+                                               job.job_id))
 
     # -- events ------------------------------------------------------------------
 
@@ -364,13 +402,24 @@ class ClusterSimulator:
                 self._schedule_completion(job)
                 self._scheduler_pass()
 
+    def _on_checkpoint(self, job_id: int, epoch: int):
+        """Periodic checkpoint (§6): refresh the NodeFail restore point."""
+        job = self._by_id.get(job_id)
+        if job is None or job.state is not JobState.RUNNING or \
+                epoch != self._ckpt_epoch.get(job_id):
+            return
+        self._advance(job)
+        self._ckpt_work[job_id] = job.work_done
+        self.engine.schedule(CheckpointTick(
+            self.now + self.config.checkpoint_period_s, job_id, epoch))
+
     def _on_failure(self, node: int):
         owner = self.cluster.fail_node(node)
         self.cluster.num_nodes -= 1
         if owner is None:
             self._snapshot()
             return
-        job = next(j for j in self.jobs if j.job_id == owner)
+        job = self._by_id[owner]
         self._advance(job)
         job.work_done = self._ckpt_work.get(job.job_id, 0.0)  # ckpt restore
         survivors = self.cluster.allocation(job.job_id)
@@ -411,11 +460,11 @@ class ClusterSimulator:
     def _on_straggler(self, node: int, slowdown: float):
         owner = self.cluster.set_straggler(node, slowdown)
         if owner is not None:
-            self._push(self.now + self.config.straggler_scan_s,
-                       "straggler_scan", owner)
+            self.engine.schedule(StragglerScan(
+                self.now + self.config.straggler_scan_s, owner))
 
     def _on_straggler_scan(self, job_id: int):
-        job = next((j for j in self.jobs if j.job_id == job_id), None)
+        job = self._by_id.get(job_id)
         if job is None or job.state is not JobState.RUNNING:
             return
         if self.cluster.job_rate_factor(job_id) >= \
@@ -433,8 +482,8 @@ class ClusterSimulator:
                 job.nodes, job.nodes, reason="slice-migration"))
             self._schedule_completion(job)
         else:
-            self._push(self.now + self.config.straggler_scan_s,
-                       "straggler_scan", job_id)
+            self.engine.schedule(StragglerScan(
+                self.now + self.config.straggler_scan_s, job_id))
 
     # -- main loop ------------------------------------------------------------------
 
@@ -443,33 +492,12 @@ class ClusterSimulator:
         for job in self.jobs:
             if not self.config.flexible:
                 job.malleable = False
-            self._push(job.submit_time, "arrival", job.job_id)
+            self.engine.schedule(JobSubmit(job.submit_time, job.job_id))
         for t, node in self.config.failures:
-            self._push(t, "failure", node)
+            self.engine.schedule(NodeFail(t, node))
         for t, node, slow in self.config.stragglers:
-            self._push(t, "straggler", node, slow)
-        by_id = {j.job_id: j for j in self.jobs}
-        guard = 0
-        while self._heap:
-            guard += 1
-            if guard > 5_000_000:
-                raise RuntimeError("simulator runaway")
-            t, _, kind, payload = heapq.heappop(self._heap)
-            self.now = t
-            if kind == "arrival":
-                self._on_arrival(by_id[payload[0]])
-            elif kind == "complete":
-                self._on_complete(by_id[payload[0]], payload[1])
-            elif kind == "check":
-                self._on_check(by_id[payload[0]])
-            elif kind == "expand_timeout":
-                self._on_expand_timeout(*payload)
-            elif kind == "failure":
-                self._on_failure(payload[0])
-            elif kind == "straggler":
-                self._on_straggler(*payload)
-            elif kind == "straggler_scan":
-                self._on_straggler_scan(payload[0])
+            self.engine.schedule(StragglerOnset(t, node, slow))
+        self.engine.run()
         makespan = max((j.end_time for j in self.jobs
                         if j.end_time > 0), default=0.0)
         rep = SimReport(self.config, self.jobs, self.actions, self.timeline,

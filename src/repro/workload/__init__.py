@@ -1,5 +1,10 @@
-"""Workload generation (Feitelson model, Poisson arrivals)."""
+"""Workload generation (Feitelson model, Poisson arrivals, SWF replay)."""
 from repro.workload.feitelson import (feitelson_sizes, make_workload,
                                       poisson_arrivals)
+from repro.workload.swf import (MALLEABLE, MOLDABLE, RIGID, MalleabilityMix,
+                                SWFJob, SWFTrace, annotate_malleability,
+                                jobs_from_swf, parse_swf)
 
-__all__ = ["feitelson_sizes", "make_workload", "poisson_arrivals"]
+__all__ = ["feitelson_sizes", "make_workload", "poisson_arrivals",
+           "SWFJob", "SWFTrace", "MalleabilityMix", "annotate_malleability",
+           "jobs_from_swf", "parse_swf", "RIGID", "MOLDABLE", "MALLEABLE"]

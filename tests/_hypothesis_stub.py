@@ -1,0 +1,168 @@
+"""Degenerate `hypothesis` fallback so tier-1 collects without the package.
+
+Provides just the surface the test-suite uses — ``given``, ``settings``,
+and ``strategies.{integers,floats,sampled_from,booleans,lists}`` — with
+strategies that enumerate a handful of fixed boundary examples instead of
+searching.  With real hypothesis installed the test modules never import
+this; the stub exists so `python -m pytest` runs everywhere (the container
+has no hypothesis) while CI with `requirements-dev.txt` gets the real
+property-based search.
+
+Usage in a test module:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_stub import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import itertools
+
+#: Cap on example tuples per test; keeps the fallback cheap.
+MAX_EXAMPLES = 6
+
+
+class Strategy:
+    """A fixed, ordered set of examples standing in for a search space."""
+
+    def __init__(self, examples):
+        self.examples = list(examples)
+        if not self.examples:
+            raise ValueError("stub strategy needs at least one example")
+
+    # hypothesis API subset some suites touch
+    def map(self, fn):
+        return Strategy([fn(x) for x in self.examples])
+
+    def filter(self, pred):
+        kept = [x for x in self.examples if pred(x)]
+        return Strategy(kept or self.examples[:1])
+
+
+class _Strategies:
+    """Stand-in for the `hypothesis.strategies` module."""
+
+    @staticmethod
+    def integers(min_value=0, max_value=None):
+        if max_value is None:
+            max_value = min_value + 100
+        mid = (min_value + max_value) // 2
+        vals = sorted({min_value, mid, max_value})
+        return Strategy(vals)
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        mid = (min_value + max_value) / 2.0
+        vals = []
+        for v in (min_value, mid, max_value):
+            if v not in vals:
+                vals.append(v)
+        return Strategy(vals)
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        picks = [seq[0], seq[len(seq) // 2], seq[-1]]
+        uniq = []
+        for p in picks:
+            if p not in uniq:
+                uniq.append(p)
+        return Strategy(uniq)
+
+    @staticmethod
+    def booleans():
+        return Strategy([False, True])
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=None):
+        base = elements.examples
+        out = []
+        if min_size == 0:
+            out.append([])
+        out.append(base[: max(min_size, 1)])
+        if max_size is None or len(base) <= max_size:
+            out.append(list(base))
+        return Strategy([x for x in out if len(x) >= min_size] or [[]])
+
+    @staticmethod
+    def just(value):
+        return Strategy([value])
+
+
+strategies = _Strategies()
+
+
+def _combos(arg_strats, kw_strats):
+    """A small deterministic sample of the example cross-product.
+
+    Takes the "diagonal" first (i-th example of every strategy, cycling),
+    which covers each strategy's boundary values without exploding
+    combinatorially, then pads from the full product up to MAX_EXAMPLES.
+    """
+    names = list(kw_strats)
+    spaces = [s.examples for s in arg_strats] + \
+             [kw_strats[n].examples for n in names]
+    if not spaces:
+        return [((), {})]
+    depth = max(len(sp) for sp in spaces)
+    seen, combos = set(), []
+
+    def add(tup):
+        if tup not in seen and len(combos) < MAX_EXAMPLES:
+            seen.add(tup)
+            combos.append(tup)
+
+    for i in range(depth):
+        add(tuple(sp[i % len(sp)] for sp in spaces))
+    for tup in itertools.product(*spaces):
+        if len(combos) >= MAX_EXAMPLES:
+            break
+        add(tup)
+    n_pos = len(arg_strats)
+    return [(tup[:n_pos], dict(zip(names, tup[n_pos:])))
+            for tup in combos]
+
+
+def given(*arg_strats, **kw_strats):
+    """Run the test once per sampled example tuple (no shrinking/search)."""
+
+    def deco(fn):
+        # No functools.wraps: copying __wrapped__ would let pytest unwrap
+        # to the original signature and demand fixtures for strategy args.
+        def wrapper():
+            for pos, kw in _combos(arg_strats, kw_strats):
+                try:
+                    fn(*pos, **kw)
+                except _AssumptionFailed:
+                    continue
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco
+
+
+def settings(*_args, **_kwargs):
+    """`@settings(...)` no-op: example budget is fixed by the stub."""
+
+    def deco(fn):
+        return fn
+    return deco
+
+
+class HealthCheck:
+    """Placeholder attributes for `suppress_health_check=[...]` usages."""
+    too_slow = data_too_large = filter_too_much = None
+    function_scoped_fixture = differing_executors = None
+
+
+class _AssumptionFailed(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    """Reject the current example (the `given` wrapper moves on)."""
+    if not condition:
+        raise _AssumptionFailed
+    return True

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                              # container has no hypothesis
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.optim import (AdamWConfig, apply_updates, global_norm, init_state,
                          schedule)

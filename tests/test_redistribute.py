@@ -1,6 +1,9 @@
 """Factor-based redistribution plans (Listing 3 / Fig. 2) + cost model."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                              # container has no hypothesis
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core import expand_plan, shrink_plan, transfer_time_s
 

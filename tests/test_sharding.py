@@ -1,7 +1,10 @@
 """Sharding rules: divisibility fallback, ZeRO-1, property tests."""
 import jax
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                              # container has no hypothesis
+    from _hypothesis_stub import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.core import TP_DP_RULES, FSDP_RULES, LONG_CONTEXT_RULES, make_mesh

@@ -1,0 +1,161 @@
+"""SWF trace parser + malleability annotation + Job adapter."""
+import os
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                              # container has no hypothesis
+    from _hypothesis_stub import given, settings, strategies as st
+
+import pytest
+
+from repro.rms import ClusterSimulator, JobState, SimConfig
+from repro.workload import (MALLEABLE, MOLDABLE, RIGID, MalleabilityMix,
+                            annotate_malleability, jobs_from_swf, parse_swf)
+
+DATA = os.path.join(os.path.dirname(__file__), "data", "sample.swf")
+
+GOOD = "1 10 5 600 8 -1 -1 8 900 -1 1 3 1 2 1 1 -1 -1"
+
+
+# -- parsing ----------------------------------------------------------------
+
+def test_parse_sample_file():
+    trace = parse_swf(DATA)
+    assert len(trace.jobs) == 24
+    assert trace.skipped_lines == 0
+    assert trace.max_nodes == 64
+    assert trace.header["Computer"] == "synthetic-64"
+    first = trace.jobs[0]
+    assert (first.job_id, first.submit_time, first.run_time,
+            first.allocated_procs) == (1, 0.0, 620.0, 8)
+
+
+def test_header_comments_parsed_and_non_kv_comments_ignored():
+    trace = parse_swf(["; MaxNodes: 128", "; just a remark", GOOD])
+    assert trace.max_nodes == 128
+    assert len(trace.jobs) == 1
+
+
+def test_blank_lines_ignored():
+    trace = parse_swf(["", "   ", GOOD, ""])
+    assert len(trace.jobs) == 1
+    assert trace.skipped_lines == 0
+
+
+def test_malformed_line_skipped_and_counted():
+    trace = parse_swf([GOOD, "1 2 three 4 5 6 7 8 9", GOOD.replace("1 ", "2 ", 1)])
+    assert len(trace.jobs) == 2
+    assert trace.skipped_lines == 1
+
+
+def test_truncated_line_skipped():
+    trace = parse_swf(["1 10 5 600 8", GOOD])
+    assert len(trace.jobs) == 1
+    assert trace.skipped_lines == 1
+
+
+def test_strict_mode_raises():
+    with pytest.raises(ValueError, match="truncated"):
+        parse_swf(["1 10 5 600 8"], strict=True)
+    with pytest.raises(ValueError, match="non-numeric"):
+        parse_swf(["1 2 three 4 5 6 7 8 9"], strict=True)
+
+
+def test_zero_runtime_records_dropped():
+    trace = parse_swf([GOOD.replace(" 600 ", " 0 ", 1), GOOD])
+    assert len(trace.jobs) == 1
+    assert trace.skipped_lines == 1
+
+
+def test_allocated_falls_back_to_requested():
+    line = "1 10 5 600 -1 -1 -1 16 900 -1 1 3 1 2 1 1 -1 -1"
+    trace = parse_swf([line])
+    assert trace.jobs[0].procs == 16
+
+
+# -- malleability annotation ------------------------------------------------
+
+def test_mix_validation():
+    with pytest.raises(ValueError):
+        MalleabilityMix(rigid=0.5, moldable=0.5, malleable=0.5)
+    with pytest.raises(ValueError):
+        MalleabilityMix(rigid=-0.2, moldable=0.4, malleable=0.8)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([0.0, 0.25, 0.5, 1.0]),
+       st.sampled_from([0.0, 0.25, 0.5]),
+       st.integers(0, 1000))
+def test_annotation_fractions_round_trip(rigid, moldable, seed):
+    if rigid + moldable > 1.0:
+        return
+    mix = MalleabilityMix(rigid=rigid, moldable=moldable,
+                          malleable=1.0 - rigid - moldable)
+    trace = parse_swf(DATA)
+    kinds = annotate_malleability(trace.jobs, mix, seed=seed)
+    n = len(kinds)
+    assert n == len(trace.jobs)
+    # exact quota split: realised counts within 1 job of requested
+    for kind, frac in ((RIGID, mix.rigid), (MOLDABLE, mix.moldable),
+                       (MALLEABLE, mix.malleable)):
+        assert abs(kinds.count(kind) - frac * n) <= 1
+
+
+def test_annotation_deterministic():
+    trace = parse_swf(DATA)
+    mix = MalleabilityMix(rigid=0.3, moldable=0.2, malleable=0.5)
+    a = annotate_malleability(trace.jobs, mix, seed=11)
+    b = annotate_malleability(trace.jobs, mix, seed=11)
+    c = annotate_malleability(trace.jobs, mix, seed=12)
+    assert a == b
+    assert a != c   # different seed shuffles the assignment
+
+
+# -- Job adapter ------------------------------------------------------------
+
+def test_jobs_from_swf_basics():
+    trace = parse_swf(DATA)
+    jobs, apps = jobs_from_swf(trace, num_nodes=64)
+    assert len(jobs) == 24
+    assert {j.app for j in jobs} == set(apps)
+    for j in jobs:
+        app = apps[j.app]
+        assert 1 <= j.min_nodes <= j.requested_nodes <= j.max_nodes <= 64
+        # calibration: exec at the recorded size == recorded runtime
+        rec = next(r for r in trace.jobs
+                   if f"swf:{r.job_id}" == j.app)
+        base = j.preferred if j.malleable else j.requested_nodes
+        assert app.exec_time(base) == pytest.approx(rec.run_time, rel=0.01)
+
+
+def test_rigid_annotation_pins_sizes():
+    trace = parse_swf(DATA)
+    jobs, _ = jobs_from_swf(
+        trace, num_nodes=64,
+        mix=MalleabilityMix(rigid=1.0, moldable=0.0, malleable=0.0))
+    assert all(not j.malleable for j in jobs)
+    assert all(j.min_nodes == j.max_nodes == j.requested_nodes
+               for j in jobs)
+
+
+def test_time_scale_compresses_arrivals():
+    trace = parse_swf(DATA)
+    full, _ = jobs_from_swf(trace, num_nodes=64, time_scale=1.0)
+    tenth, _ = jobs_from_swf(trace, num_nodes=64, time_scale=0.1)
+    assert max(j.submit_time for j in tenth) == pytest.approx(
+        max(j.submit_time for j in full) * 0.1)
+
+
+def test_trace_replay_end_to_end():
+    """The sample trace runs through the engine; flexible <= fixed."""
+    trace = parse_swf(DATA)
+    mix = MalleabilityMix(rigid=0.2, moldable=0.2, malleable=0.6)
+    makespans = {}
+    for flexible in (False, True):
+        jobs, apps = jobs_from_swf(trace, num_nodes=64, mix=mix, seed=7)
+        rep = ClusterSimulator(
+            jobs, SimConfig(num_nodes=64, flexible=flexible),
+            apps=apps).run()
+        assert all(j.state is JobState.COMPLETED for j in rep.jobs)
+        makespans[flexible] = rep.makespan
+    assert makespans[True] <= makespans[False]
