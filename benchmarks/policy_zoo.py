@@ -1,0 +1,88 @@
+"""Policy zoo: which scheduling policy wins per malleability mix?
+
+Replays an SWF trace across *every* registered scheduling policy × a set of
+rigid/moldable/malleable mixes via the parallel sweep driver
+(:mod:`repro.rms.sweep`), then reports the winner (lowest makespan) per
+mix — the Chadha/Zojer-style policy-grid study the ROADMAP "policy zoo"
+item asks for.
+
+  PYTHONPATH=src python benchmarks/policy_zoo.py \\
+      [--trace tests/data/sample.swf] [--nodes 64] [--workers 4] \\
+      [--mixes 1:0:0,0.2:0.2:0.6,0:0:1] [--metric makespan_s] \\
+      [--artifact zoo.json]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+from repro.rms import POLICY_REGISTRY
+from repro.rms.sweep import (artifact, build_grid, csv_lines, parse_mixes,
+                             run_sweep, winners_by_mix, write_artifact)
+
+DEFAULT_TRACE = os.path.join(os.path.dirname(__file__), "..", "tests",
+                             "data", "sample.swf")
+DEFAULT_MIXES = "1:0:0,0.2:0.2:0.6,0:0:1"
+
+
+def run_zoo(trace: str, *, num_nodes: int = 64, workers: int = 0,
+            mixes=None, seed: int = 7, metric: str = "makespan_s"):
+    """Returns (rows, winners): sweep rows + per-mix winning policy."""
+    mixes = mixes or parse_mixes(DEFAULT_MIXES)
+    policies = sorted(POLICY_REGISTRY)
+    points = build_grid([trace], policies, mixes, (True,),
+                        num_nodes=num_nodes, seed=seed)
+    rows = run_sweep(points, workers=workers)
+    return rows, winners_by_mix(rows, metric=metric)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", default=os.path.normpath(DEFAULT_TRACE))
+    ap.add_argument("--nodes", type=int, default=64)
+    ap.add_argument("--workers", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--mixes", default=DEFAULT_MIXES)
+    ap.add_argument("--metric", default="makespan_s",
+                    help="winner criterion (any numeric row column)")
+    ap.add_argument("--artifact", default=None,
+                    help="write the versioned JSON artifact here")
+    args = ap.parse_args(argv)
+
+    mixes = parse_mixes(args.mixes)
+    policies = sorted(POLICY_REGISTRY)
+    print(f"# policy zoo: {os.path.basename(args.trace)}, "
+          f"{len(policies)} policies x {len(mixes)} mixes "
+          f"({args.workers or 1} workers)")
+    rows, winners = run_zoo(args.trace, num_nodes=args.nodes,
+                            workers=args.workers, mixes=mixes,
+                            seed=args.seed, metric=args.metric)
+    for line in csv_lines(rows):
+        print(line)
+
+    by_mix = {}
+    for row in rows:
+        by_mix.setdefault((row["rigid"], row["moldable"], row["malleable"]),
+                          []).append(row)
+    print(f"\n# winner per mix (lowest {args.metric}):")
+    print(f"{'rigid':>6} {'mold':>6} {'mall':>6}  {'winner':<12} "
+          + " ".join(f"{p:>12}" for p in policies))
+    for mix in sorted(by_mix):
+        vals = {r["policy"]: float(r[args.metric]) for r in by_mix[mix]}
+        cells = " ".join(f"{vals.get(p, float('nan')):12.0f}"
+                         for p in policies)
+        print(f"{mix[0]:6.2f} {mix[1]:6.2f} {mix[2]:6.2f}  "
+              f"{winners[mix]:<12} {cells}")
+
+    if args.artifact:
+        grid = {"traces": [os.path.basename(args.trace)],
+                "policies": policies, "mixes": [list(m) for m in mixes],
+                "flexibles": [True], "num_nodes": args.nodes,
+                "seed": args.seed}
+        write_artifact(args.artifact, artifact(rows, grid))
+        print(f"# wrote {args.artifact} ({len(rows)} rows)")
+    return rows, winners
+
+
+if __name__ == "__main__":
+    main()

@@ -2,24 +2,33 @@
 flexible (preferred mode, as in the paper's §7.5).
 
 Runs on the event-driven engine (``repro.rms.engine``); pass ``policy`` to
-re-derive the table under any registered scheduling policy.
+re-derive the table under any registered scheduling policy, and
+``artifact`` to emit the rows in the versioned sweep schema shared with
+``benchmarks/trace_replay.py`` and ``benchmarks/policy_zoo.py``.
 """
 from __future__ import annotations
 
 from benchmarks.common import run_sim
+from repro.rms.sweep import artifact, report_row, row_key, write_artifact
 
 
-def main(quick: bool = False, policy: str = "easy"):
+def main(quick: bool = False, policy: str = "easy",
+         artifact_path: str = None):
     sizes = (50, 100) if quick else (50, 100, 200, 400)
     print(f"# Table 4 + Fig4/5: workloads, fixed vs flexible (preferred, "
           f"{policy} scheduling policy)")
     print("jobs,version,util_rate_pct,job_waiting_s,job_exec_s,"
           "job_completion_s,makespan_s,makespan_gain_pct,wait_gain_pct")
     out = {}
+    rows = []
     for n in sizes:
         base = run_sim(n, flexible=False, policy=policy)
         flex = run_sim(n, flexible=True, policy=policy)
         out[n] = (base, flex)
+        for flexible, rep in ((False, base), (True, flex)):
+            rows.append(report_row(
+                rep, trace=f"feitelson-{n}", policy=policy,
+                mix=(0.0, 0.0, 1.0), flexible=flexible))
         bw, be, bc = base.averages()
         fw, fe, fc = flex.averages()
         for name, rep, (w, e, c) in (("fixed", base, (bw, be, bc)),
@@ -42,8 +51,23 @@ def main(quick: bool = False, policy: str = "easy"):
     ]
     for name, ok in checks:
         print(f"# claim[{name}]: {ok}")
+    if artifact_path:
+        grid = {"traces": [f"feitelson-{n}" for n in sizes],
+                "policies": [policy], "mixes": [[0.0, 0.0, 1.0]],
+                "flexibles": [False, True], "num_nodes": 64, "seed": 7}
+        # canonical row order: the schema promises row_key-sorted results
+        write_artifact(artifact_path,
+                       artifact(sorted(rows, key=row_key), grid))
+        print(f"# wrote {artifact_path} ({len(rows)} rows)")
     return out
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--policy", default="easy")
+    ap.add_argument("--artifact", default=None)
+    a = ap.parse_args()
+    main(quick=a.quick, policy=a.policy, artifact_path=a.artifact)

@@ -5,41 +5,29 @@ paper's five synthetic apps, ingest a real (or sampled) Standard Workload
 Format trace, annotate a fraction of jobs as malleable, and compare the
 fixed and flexible configurations under several scheduling policies.
 
+Runs on the parallel sweep driver (:mod:`repro.rms.sweep`) and shares its
+versioned artifact schema (``--artifact``).
+
   PYTHONPATH=src python benchmarks/trace_replay.py \\
       [--trace tests/data/sample.swf] [--nodes 64] \\
       [--policies easy,fcfs] [--malleable 0.6] [--moldable 0.2] \\
-      [--time-scale 1.0] [--max-jobs N]
+      [--time-scale 1.0] [--max-jobs N] [--workers 4] [--artifact out.json]
 """
 from __future__ import annotations
 
 import argparse
 import os
 
-from repro.rms import ClusterSimulator, SchedulerConfig, SimConfig
-from repro.workload import MalleabilityMix, SWFTrace, jobs_from_swf, \
-    parse_swf
+from repro.rms.sweep import (artifact, build_grid, run_sweep, write_artifact)
+from repro.workload import parse_swf
 
 DEFAULT_TRACE = os.path.join(os.path.dirname(__file__), "..", "tests",
                              "data", "sample.swf")
 
 
-def replay(trace, *, num_nodes: int, policy: str, flexible: bool,
-           mix: MalleabilityMix, time_scale: float = 1.0,
-           max_jobs=None, seed: int = 7):
-    """`trace` is a path or an already-parsed SWFTrace."""
-    if not isinstance(trace, SWFTrace):
-        trace = parse_swf(trace)
-    jobs, apps = jobs_from_swf(trace, num_nodes=num_nodes, mix=mix,
-                               seed=seed, max_jobs=max_jobs,
-                               time_scale=time_scale)
-    cfg = SimConfig(num_nodes=num_nodes, flexible=flexible,
-                    sched=SchedulerConfig(policy=policy))
-    return ClusterSimulator(jobs, cfg, apps=apps).run()
-
-
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--trace", default=DEFAULT_TRACE)
+    ap.add_argument("--trace", default=os.path.normpath(DEFAULT_TRACE))
     ap.add_argument("--nodes", type=int, default=64)
     ap.add_argument("--policies", default="easy,fcfs")
     ap.add_argument("--malleable", type=float, default=0.6)
@@ -47,43 +35,52 @@ def main(argv=None):
     ap.add_argument("--time-scale", type=float, default=1.0)
     ap.add_argument("--max-jobs", type=int, default=None)
     ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--workers", type=int, default=0)
+    ap.add_argument("--artifact", default=None,
+                    help="write the versioned sweep JSON artifact here")
     args = ap.parse_args(argv)
 
-    mix = MalleabilityMix(
-        rigid=max(0.0, 1.0 - args.malleable - args.moldable),
-        moldable=args.moldable, malleable=args.malleable)
+    mix = (max(0.0, 1.0 - args.malleable - args.moldable),
+           args.moldable, args.malleable)
+    policies = [p.strip() for p in args.policies.split(",") if p.strip()]
     trace = parse_swf(args.trace)
     print(f"# trace: {args.trace} ({len(trace.jobs)} jobs, "
           f"{trace.skipped_lines} skipped lines, "
           f"MaxNodes={trace.max_nodes})")
-    print(f"# mix: rigid={mix.rigid:.2f} moldable={mix.moldable:.2f} "
-          f"malleable={mix.malleable:.2f}")
+    print(f"# mix: rigid={mix[0]:.2f} moldable={mix[1]:.2f} "
+          f"malleable={mix[2]:.2f}")
+    points = build_grid([args.trace], policies, [mix], (False, True),
+                        num_nodes=args.nodes, seed=args.seed,
+                        time_scale=args.time_scale, max_jobs=args.max_jobs)
+    rows = run_sweep(points, workers=args.workers)
+    by_key = {(r["policy"], r["flexible"]): r for r in rows}
     print("policy,version,makespan_s,util_avg_pct,util_std_pct,"
           "avg_wait_s,avg_completion_s,reconfigs")
-    out = {}
-    for policy in args.policies.split(","):
-        policy = policy.strip()
+    for policy in policies:
         for flexible in (False, True):
-            rep = replay(trace, num_nodes=args.nodes, policy=policy,
-                         flexible=flexible, mix=mix,
-                         time_scale=args.time_scale,
-                         max_jobs=args.max_jobs, seed=args.seed)
-            out[(policy, flexible)] = rep
-            u, us = rep.utilization()
-            w, _, c = rep.averages()
-            nrec = sum(1 for a in rep.actions
-                       if a.action in ("expand", "shrink"))
+            r = by_key[(policy, flexible)]
             name = "flexible" if flexible else "fixed"
-            print(f"{policy},{name},{rep.makespan:.0f},{u:.2f},{us:.2f},"
-                  f"{w:.1f},{c:.1f},{nrec}")
-    for policy in args.policies.split(","):
-        policy = policy.strip()
-        base, flex = out[(policy, False)], out[(policy, True)]
-        gain = ((base.makespan - flex.makespan) / base.makespan * 100
-                if base.makespan else 0.0)
+            nrec = r["expands"] + r["shrinks"]
+            print(f"{policy},{name},{r['makespan_s']:.0f},"
+                  f"{r['util_avg_pct']:.2f},{r['util_std_pct']:.2f},"
+                  f"{r['avg_wait_s']:.1f},{r['avg_completion_s']:.1f},"
+                  f"{nrec}")
+    for policy in policies:
+        base = by_key[(policy, False)]
+        flex = by_key[(policy, True)]
+        gain = ((base["makespan_s"] - flex["makespan_s"])
+                / base["makespan_s"] * 100 if base["makespan_s"] else 0.0)
         print(f"# claim[{policy}: flexible makespan <= fixed]: "
-              f"{flex.makespan <= base.makespan} (gain {gain:.1f}%)")
-    return out
+              f"{flex['makespan_s'] <= base['makespan_s']} "
+              f"(gain {gain:.1f}%)")
+    if args.artifact:
+        grid = {"traces": [os.path.basename(args.trace)],
+                "policies": policies, "mixes": [list(mix)],
+                "flexibles": [False, True], "num_nodes": args.nodes,
+                "seed": args.seed}
+        write_artifact(args.artifact, artifact(rows, grid))
+        print(f"# wrote {args.artifact} ({len(rows)} rows)")
+    return rows
 
 
 if __name__ == "__main__":

@@ -6,12 +6,13 @@ vs flexible (malleable), and reports the paper's headline measures
 (Table 4 / Figs. 4-6).
 
   PYTHONPATH=src python examples/workload_sim.py [--jobs 50] [--async]
-      [--policy easy|fcfs|conservative|malleable]
+      [--policy fcfs|easy|conservative|malleable|sjf|fairshare|preempt|moldable]
       [--trace tests/data/sample.swf]
 """
 import argparse
 
-from repro.rms import ClusterSimulator, SchedulerConfig, SimConfig
+from repro.rms import (POLICY_REGISTRY, ClusterSimulator, SchedulerConfig,
+                       SimConfig)
 from repro.workload import MalleabilityMix, jobs_from_swf, make_workload, \
     parse_swf
 
@@ -39,7 +40,8 @@ def main():
     ap.add_argument("--nodes", type=int, default=64)
     ap.add_argument("--async", dest="async_", action="store_true")
     ap.add_argument("--policy", default="easy",
-                    help="fcfs | easy | conservative | malleable")
+                    choices=sorted(POLICY_REGISTRY),
+                    help="scheduling policy (the full registry zoo)")
     ap.add_argument("--trace", default=None,
                     help="replay an SWF trace instead of the synthetic mix")
     args = ap.parse_args()

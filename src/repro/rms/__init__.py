@@ -6,9 +6,11 @@ from repro.rms.engine import (CheckpointTick, Event, ExpandTimeout, JobFinish,
                               SimulationEngine, StragglerOnset, StragglerScan)
 from repro.rms.job import Job, JobState
 from repro.rms.policy import PolicyConfig, ReconfigPolicy, factor_sizes
-from repro.rms.scheduler import (MAX_PRIORITY, POLICY_REGISTRY, Scheduler,
+from repro.rms.scheduler import (MAX_PRIORITY, POLICY_REGISTRY,
+                                 FairSharePolicy, MoldableStartPolicy,
+                                 PreemptiveBackfillPolicy, Scheduler,
                                  SchedulerConfig, SchedulingPolicy,
-                                 make_policy, register_policy)
+                                 SJFPolicy, make_policy, register_policy)
 from repro.rms.simulator import (ActionRecord, ClusterSimulator, SimConfig,
                                  SimReport)
 
@@ -16,6 +18,8 @@ __all__ = ["Cluster", "PAPER_APPS", "AppModel", "ReconfigCostModel",
            "lm_app_model", "Job", "JobState", "PolicyConfig",
            "ReconfigPolicy", "factor_sizes", "MAX_PRIORITY", "Scheduler",
            "SchedulerConfig", "SchedulingPolicy", "POLICY_REGISTRY",
+           "SJFPolicy", "FairSharePolicy", "PreemptiveBackfillPolicy",
+           "MoldableStartPolicy",
            "make_policy", "register_policy", "ActionRecord",
            "ClusterSimulator", "SimConfig", "SimReport",
            "SimulationEngine", "Event", "JobSubmit", "JobFinish",

@@ -66,6 +66,7 @@ class JobFinish(Event):
 @dataclasses.dataclass(frozen=True)
 class ReconfigPoint(Event):
     job_id: int
+    epoch: int = 0        # invalidates a chain left over from a prior start
 
 
 @dataclasses.dataclass(frozen=True)

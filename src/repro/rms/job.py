@@ -33,6 +33,7 @@ class Job:
     check_period_s: float = 15.0  # Table 1 "Scheduling period" (0 = every iter)
     requested_nodes: int = 0      # submission size (paper: launched at max)
     data_bytes: int = 0           # redistributed state size (FS: 1 GB)
+    user: int = 0                 # submitting user (fair-share accounting)
 
     # -- dynamic state (owned by the RMS / simulator) ------------------------
     state: JobState = JobState.PENDING

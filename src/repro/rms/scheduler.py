@@ -13,10 +13,29 @@ Zojer et al.) so trace replays can compare them:
                      may start now only if they don't delay that reservation
                      (using runtime estimates).
 - ``conservative``   every queued job gets a reservation; a backfill
-                     candidate must not delay *any* reservation.
+                     candidate must not delay *any* reservation.  With
+                     ``backfill=False`` it degenerates to strict priority
+                     order (fcfs semantics).
 - ``malleable``      EASY variant that knows running malleable jobs can be
                      shrunk at their next reconfiguration point, so the head
                      reservation lands earlier and backfill is bolder.
+- ``sjf``            shortest-job-first EASY variant: queue ordered by
+                     estimated remaining runtime, with an age guard — jobs
+                     older than ``sjf_starvation_age_s`` jump ahead of every
+                     younger job, so SJF never starves long jobs.
+- ``fairshare``      EASY variant whose priority subtracts each user's
+                     exponentially-decayed node-seconds usage
+                     (half-life ``fairshare_halflife_s``) — heavy users sink,
+                     light users rise.
+- ``preempt``        preemptive backfill: when the head reservation slips
+                     beyond ``preempt_grace_s``, running malleable jobs of
+                     lower priority are shrunk one factor step (optionally
+                     requeued) until the head starts *now*.
+- ``moldable``       start-size optimizer: moldable/malleable jobs start at
+                     the power-of-two size in ``[min_nodes, max_nodes]``
+                     minimizing estimated completion (runtime scaling + the
+                     ``ReconfigCostModel`` cost of factor-stepping to the
+                     preferred size afterwards).
 
 Shared priority: ``age_weight * age + size_weight * (1 - size/cluster)
 + boost`` where *boost* is the maximum-priority path used for resizer jobs
@@ -32,6 +51,7 @@ import dataclasses
 from typing import Callable, Dict, List, Optional, Tuple, Type
 
 from repro.rms.cluster import Cluster
+from repro.rms.costmodel import ReconfigCostModel
 from repro.rms.job import Job, JobState
 
 MAX_PRIORITY = 1e12
@@ -43,8 +63,17 @@ RuntimeEstimate = Callable[[Job], float]
 class SchedulerConfig:
     age_weight: float = 1.0
     size_weight: float = 100.0
-    backfill: bool = True          # easy/malleable only: False => no backfill
+    backfill: bool = True          # False => strict priority, no backfill
     policy: str = "easy"           # key into POLICY_REGISTRY
+    # -- sjf ------------------------------------------------------------------
+    sjf_starvation_age_s: float = 3600.0   # age guard: older jobs jump ahead
+    # -- fairshare ------------------------------------------------------------
+    fairshare_halflife_s: float = 3600.0   # usage decay half-life
+    fairshare_weight: float = 200.0        # priority penalty per capacity-
+                                           # half-life of decayed usage
+    # -- preempt --------------------------------------------------------------
+    preempt_grace_s: float = 60.0          # tolerated head-reservation slip
+    preempt_requeue: bool = False          # requeue victims stuck at min size
 
 
 # ---------------------------------------------------------------------------
@@ -143,45 +172,65 @@ class FCFSPolicy(SchedulingPolicy):
 
 @register_policy("easy")
 class EasyBackfillPolicy(SchedulingPolicy):
-    """EASY backfill (paper §7.2 setup): one reservation for the head job."""
+    """EASY backfill (paper §7.2 setup): one reservation for the head job.
+
+    Subclasses customize *sizing*, not structure: ``_start_size`` picks the
+    allocation a job starts with now (None: must wait), ``_reservation_need``
+    the head's reservation size, ``_est_end`` the backfill end estimate —
+    the moldable start-size optimizer overrides exactly these three.
+    """
+
+    def _start_size(self, job: Job, free: int,
+                    runtime_estimate: RuntimeEstimate) -> Optional[int]:
+        """Nodes to start ``job`` with right now; None when it must wait."""
+        return job.requested_nodes if job.requested_nodes <= free else None
+
+    def _reservation_need(self, head: Job) -> int:
+        return head.requested_nodes
+
+    def _est_end(self, job: Job, size: int, now: float,
+                 runtime_estimate: RuntimeEstimate) -> float:
+        return now + max(runtime_estimate(job), 0.0)
 
     def schedule(self, pending, running, now, runtime_estimate):
         free = self.cluster.free_nodes
         queue = self._queue(pending, now)
         starts: List[Tuple[Job, int]] = []
-        if not queue:
-            return starts
         i = 0
         # Head-of-queue jobs start in priority order while they fit.
-        while i < len(queue) and queue[i].requested_nodes <= free:
-            starts.append((queue[i], queue[i].requested_nodes))
-            free -= queue[i].requested_nodes
+        while i < len(queue):
+            s = self._start_size(queue[i], free, runtime_estimate)
+            if s is None:
+                break
+            starts.append((queue[i], s))
+            free -= s
             i += 1
         if i >= len(queue) or not self.config.backfill:
             return starts
         # Reservation for the blocked head: when will enough nodes free up?
-        head = queue[i]
+        head_need = self._reservation_need(queue[i])
         avail = free
         shadow_time: Optional[float] = None
         shadow_free_at_reservation = 0
         for t, n in self._releases(running, now, runtime_estimate):
             avail += n
-            if avail >= head.requested_nodes:
+            if avail >= head_need:
                 shadow_time = t
-                shadow_free_at_reservation = avail - head.requested_nodes
+                shadow_free_at_reservation = avail - head_need
                 break
         # Backfill the rest: start now iff it fits in `free` and either ends
         # before the reservation or fits in the reservation's spare nodes.
         for job in queue[i + 1:]:
-            if job.requested_nodes > free:
+            s = self._start_size(job, free, runtime_estimate)
+            if s is None:
                 continue
-            est_end = now + max(runtime_estimate(job), 0.0)
+            est_end = self._est_end(job, s, now, runtime_estimate)
             if shadow_time is None or est_end <= shadow_time or \
-                    job.requested_nodes <= shadow_free_at_reservation:
-                starts.append((job, job.requested_nodes))
-                free -= job.requested_nodes
+                    s <= shadow_free_at_reservation:
+                starts.append((job, s))
+                free -= s
                 if shadow_time is not None and est_end > shadow_time:
-                    shadow_free_at_reservation -= job.requested_nodes
+                    shadow_free_at_reservation -= s
         return starts
 
 
@@ -193,9 +242,15 @@ class ConservativeBackfillPolicy(SchedulingPolicy):
     estimates, reserves every queued job at its earliest feasible slot in
     priority order, and lets a job start *now* only when `now` is that
     earliest slot — so nobody leapfrogs anybody's reservation.
+
+    ``SchedulerConfig.backfill=False`` is honored: without backfill no job
+    may start ahead of a blocked higher-priority job, which is exactly fcfs.
     """
 
     def schedule(self, pending, running, now, runtime_estimate):
+        if not self.config.backfill:
+            return FCFSPolicy.schedule(self, pending, running, now,
+                                       runtime_estimate)
         queue = self._queue(pending, now)
         if not queue:
             return []
@@ -280,6 +335,297 @@ class MalleableEasyPolicy(EasyBackfillPolicy):
         return sorted(releases)
 
 
+@register_policy("sjf")
+class SJFPolicy(EasyBackfillPolicy):
+    """Shortest-job-first with EASY backfill and a starvation guard.
+
+    Priority ranks by *estimated remaining runtime* (shorter first) plus the
+    usual age term; any job older than ``sjf_starvation_age_s`` is promoted
+    above every younger job (among the aged, older wins), so a long job can
+    wait at most the guard age plus the drain of already-started work.
+    """
+
+    def __init__(self, cluster: Cluster, config: SchedulerConfig):
+        super().__init__(cluster, config)
+        self._est: Optional[RuntimeEstimate] = None
+
+    def priority(self, job: Job, now: float) -> float:
+        if job.priority_boost:
+            return job.priority_boost
+        age = now - job.submit_time
+        if age >= self.config.sjf_starvation_age_s:
+            # Aged out: beats any runtime estimate, loses only to boosts.
+            return MAX_PRIORITY / 2 + age
+        est = self._est(job) if self._est is not None else 0.0
+        return self.config.age_weight * age - max(est, 0.0)
+
+    def schedule(self, pending, running, now, runtime_estimate):
+        self._est = runtime_estimate
+        try:
+            return super().schedule(pending, running, now, runtime_estimate)
+        finally:
+            self._est = None
+
+
+@register_policy("fairshare")
+class FairSharePolicy(EasyBackfillPolicy):
+    """Multifactor priority minus per-user decayed usage (Slurm fair-share).
+
+    Usage is node-seconds, decayed exponentially with half-life
+    ``fairshare_halflife_s`` and charged on every ``schedule`` call from the
+    running set.  The penalty is normalized by one *capacity half-life*
+    (``num_nodes * halflife`` node-seconds), so ``fairshare_weight`` is
+    comparable to the other priority weights.
+    """
+
+    def __init__(self, cluster: Cluster, config: SchedulerConfig):
+        super().__init__(cluster, config)
+        self._usage: Dict[int, float] = {}
+        self._last_t: Optional[float] = None
+        self._known: Dict[int, Job] = {}   # every job ever seen, until final
+
+    # -- usage ledger --------------------------------------------------------
+
+    def usage(self, user: int) -> float:
+        return self._usage.get(user, 0.0)
+
+    def record_usage(self, user: int, node_seconds: float) -> None:
+        self._usage[user] = self._usage.get(user, 0.0) + node_seconds
+
+    @staticmethod
+    def _node_seconds(job: Job, a: float, b: float) -> float:
+        """Node-seconds ``job`` consumed over ``(a, b]``, from its recorded
+        allocation history (exact across starts/resizes/requeues)."""
+        if b <= a:
+            return 0.0
+        hist = job.nodes_history
+        if not hist:
+            return 0.0
+        total = 0.0
+        for (t0, n0), (t1, _n1) in zip(hist, hist[1:]):
+            lo, hi = max(t0, a), min(t1, b)
+            if hi > lo:
+                total += n0 * (hi - lo)
+        # the open-ended last segment accrues only while still running
+        t_last, n_last = hist[-1]
+        if job.state is JobState.RUNNING and b > max(t_last, a):
+            total += n_last * (b - max(t_last, a))
+        return total
+
+    def observe(self, jobs: List[Job], now: float) -> None:
+        """Decay the ledger to ``now`` and charge the interval since the
+        previous call.
+
+        Every job ever seen (pending included) is tracked until it
+        completes, and charged from its ``nodes_history`` — so a job that
+        starts *and* finishes between two passes, is resized, or is
+        requeued by a failure/preemption is still billed exactly for the
+        node-seconds it held.
+        """
+        last = now if self._last_t is None else self._last_t
+        dt = now - last
+        if dt > 0:
+            half = max(self.config.fairshare_halflife_s, 1e-9)
+            decay = 0.5 ** (dt / half)
+            self._usage = {u: v * decay for u, v in self._usage.items()}
+        for j in jobs:
+            self._known.setdefault(j.job_id, j)
+        if dt > 0:
+            finished = []
+            for job_id, j in self._known.items():
+                ns = self._node_seconds(j, last, now)
+                if ns > 0:
+                    self.record_usage(j.user, ns)
+                if j.state in (JobState.COMPLETED, JobState.CANCELLED):
+                    finished.append(job_id)     # history is final: settled
+            for job_id in finished:
+                del self._known[job_id]
+        self._last_t = now
+
+    # -- policy --------------------------------------------------------------
+
+    def priority(self, job: Job, now: float) -> float:
+        if job.priority_boost:
+            return job.priority_boost
+        cap = max(self.cluster.num_nodes, 1) * \
+            max(self.config.fairshare_halflife_s, 1.0)
+        return (super().priority(job, now)
+                - self.config.fairshare_weight * self.usage(job.user) / cap)
+
+    def schedule(self, pending, running, now, runtime_estimate):
+        self.observe(list(pending) + list(running), now)
+        return super().schedule(pending, running, now, runtime_estimate)
+
+
+@register_policy("preempt")
+class PreemptiveBackfillPolicy(EasyBackfillPolicy):
+    """Preemptive backfill: shrink low-priority malleable runners for the head.
+
+    When the blocked head's reservation would land more than
+    ``preempt_grace_s`` in the future, running malleable jobs with priority
+    below the head's are shrunk by one factor step (lowest priority first)
+    until the head fits *now*.  Victims already at their minimum size are
+    requeued instead when ``preempt_requeue`` is set.  If no plan frees
+    enough nodes the policy falls back to plain EASY — no pointless churn.
+
+    ``schedule`` itself stays mutation-free: the shrink/requeue directives
+    are queued on :attr:`preemptions` (``(job, new_nodes)``, ``0`` means
+    requeue) and applied by the simulator/runtime *before* the returned
+    starts, so capacity accounting stays in one place.
+    """
+
+    def __init__(self, cluster: Cluster, config: SchedulerConfig):
+        super().__init__(cluster, config)
+        self.preemptions: List[Tuple[Job, int]] = []
+
+    def pop_preemptions(self) -> List[Tuple[Job, int]]:
+        out, self.preemptions = self.preemptions, []
+        return out
+
+    def _head_slip(self, free, head, running, now, runtime_estimate):
+        """Seconds until the head's reservation (None: never in profile)."""
+        avail = free
+        for t, n in self._releases(running, now, runtime_estimate):
+            avail += n
+            if avail >= head.requested_nodes:
+                return t - now
+        return None
+
+    def schedule(self, pending, running, now, runtime_estimate):
+        self.preemptions = []
+        free = self.cluster.free_nodes
+        queue = self._queue(pending, now)
+        starts: List[Tuple[Job, int]] = []
+        i = 0
+        # Same head-of-queue loop as EASY, via the sizing hook so preempt
+        # composes with sizing overrides.
+        while i < len(queue):
+            s = self._start_size(queue[i], free, runtime_estimate)
+            if s is None:
+                break
+            starts.append((queue[i], s))
+            free -= s
+            i += 1
+        if i >= len(queue):
+            return starts
+        head = queue[i]
+        slip = self._head_slip(free, head, running, now, runtime_estimate)
+        if slip is not None and slip <= self.config.preempt_grace_s:
+            return super().schedule(pending, running, now, runtime_estimate)
+        head_pr = self.priority(head, now)
+        victims = sorted(
+            (j for j in running if j.state is JobState.RUNNING
+             and j.malleable and self.priority(j, now) < head_pr),
+            key=lambda j: (self.priority(j, now), j.job_id))
+        plan: List[Tuple[Job, int]] = []
+        freed = 0
+        for v in victims:
+            if free + freed >= head.requested_nodes:
+                break
+            factor = max(v.factor, 2)
+            shrunk = v.nodes // factor
+            if v.nodes % factor == 0 and shrunk >= max(v.min_nodes, 1):
+                plan.append((v, shrunk))
+                freed += v.nodes - shrunk
+            elif self.config.preempt_requeue:
+                plan.append((v, 0))
+                freed += v.nodes
+        if not plan or free + freed < head.requested_nodes:
+            return super().schedule(pending, running, now, runtime_estimate)
+        self.preemptions = plan
+        starts.append((head, head.requested_nodes))
+        free = free + freed - head.requested_nodes
+        # Continue in strict priority order with what's left; stopping at the
+        # first non-fitting job protects the *new* head from being leapfrogged.
+        for job in queue[i + 1:]:
+            s = self._start_size(job, free, runtime_estimate)
+            if s is None:
+                break
+            starts.append((job, s))
+            free -= s
+        return starts
+
+
+@register_policy("moldable")
+class MoldableStartPolicy(EasyBackfillPolicy):
+    """Moldable start-size optimizer (ROADMAP "policy zoo" item).
+
+    For each startable job, picks the power-of-two size in
+    ``[min_nodes, max_nodes]`` minimizing estimated completion: runtime
+    scaled linearly from the requested-size estimate, plus — for malleable
+    jobs — the :class:`ReconfigCostModel` cost of factor-stepping from the
+    start size to the preferred size afterwards.  Jobs whose range contains
+    no power of two start at their requested size unchanged.
+    """
+
+    def __init__(self, cluster: Cluster, config: SchedulerConfig,
+                 cost: Optional[ReconfigCostModel] = None):
+        super().__init__(cluster, config)
+        self.cost = cost if cost is not None else ReconfigCostModel()
+
+    # -- the optimizer -------------------------------------------------------
+
+    @staticmethod
+    def candidate_sizes(job: Job) -> List[int]:
+        """Powers of two within the job's [min_nodes, max_nodes]."""
+        sizes, p = [], 1
+        while p <= job.max_nodes:
+            if p >= max(job.min_nodes, 1):
+                sizes.append(p)
+            p *= 2
+        return sizes
+
+    def reconfig_path_s(self, job: Job, start: int) -> float:
+        """Redistribution cost of factor-stepping start -> preferred."""
+        target = job.preferred or job.requested_nodes
+        factor = max(job.factor, 2)
+        total, cur = 0.0, start
+        while cur < target and cur * factor <= job.max_nodes:
+            total += self.cost.resize_time(cur, cur * factor, job.data_bytes)
+            cur *= factor
+        while cur > target and cur % factor == 0 and \
+                cur // factor >= max(job.min_nodes, 1):
+            total += self.cost.resize_time(cur, cur // factor, job.data_bytes)
+            cur //= factor
+        return total
+
+    def best_start(self, job: Job, free: int,
+                   runtime_estimate: RuntimeEstimate) -> Optional[int]:
+        """Best power-of-two start size fitting ``free`` (None: none fits)."""
+        cands = [s for s in self.candidate_sizes(job) if s <= free]
+        if not cands:
+            return None
+        base = max(runtime_estimate(job), 0.0)
+        req = max(job.requested_nodes, 1)
+        best, best_cost = None, None
+        for s in cands:
+            t = base * req / s          # ~linear scaling around requested
+            if job.malleable:
+                t += self.reconfig_path_s(job, s)
+            if best_cost is None or t < best_cost - 1e-12 or \
+                    (abs(t - best_cost) <= 1e-12 and s < best):
+                best, best_cost = s, t
+        return best
+
+    # -- EASY hooks: only the sizing differs from the base policy ------------
+
+    def _start_size(self, job: Job, free: int,
+                    runtime_estimate: RuntimeEstimate) -> Optional[int]:
+        if not self.candidate_sizes(job):
+            # No power of two in range (odd rigid request): as submitted.
+            return job.requested_nodes if job.requested_nodes <= free else None
+        return self.best_start(job, free, runtime_estimate)
+
+    def _reservation_need(self, head: Job) -> int:
+        # Reserve at the smallest size the head could ever start with.
+        return min(self.candidate_sizes(head) or [head.requested_nodes])
+
+    def _est_end(self, job: Job, size: int, now: float,
+                 runtime_estimate: RuntimeEstimate) -> float:
+        return now + max(runtime_estimate(job), 0.0) * \
+            max(job.requested_nodes, 1) / size
+
+
 # ---------------------------------------------------------------------------
 # Facade (back-compat API used by the simulator and runtime)
 # ---------------------------------------------------------------------------
@@ -303,3 +649,12 @@ class Scheduler:
                  runtime_estimate: RuntimeEstimate
                  ) -> List[Tuple[Job, int]]:
         return self.policy.schedule(pending, running, now, runtime_estimate)
+
+    def pop_preemptions(self) -> List[Tuple[Job, int]]:
+        """Drain preemption directives queued by the last ``schedule``.
+
+        ``(job, new_nodes)`` pairs; ``new_nodes == 0`` means requeue.  Empty
+        for policies that never preempt.
+        """
+        pop = getattr(self.policy, "pop_preemptions", None)
+        return pop() if pop is not None else []

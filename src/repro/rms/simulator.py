@@ -129,6 +129,7 @@ class ClusterSimulator:
         self._pending_async: Dict[int, Tuple[Decision, float]] = {}
         self._ckpt_work: Dict[int, float] = {}
         self._ckpt_epoch: Dict[int, int] = {}    # active tick chain per job
+        self._reconfig_epoch: Dict[int, int] = {}  # active check chain / job
         self._wall_decide_s: List[float] = []
         self._wire_handlers()
 
@@ -143,7 +144,8 @@ class ClusterSimulator:
         e.on(JobSubmit, lambda ev: self._on_arrival(self._by_id[ev.job_id]))
         e.on(JobFinish, lambda ev: self._on_complete(self._by_id[ev.job_id],
                                                      ev.version))
-        e.on(ReconfigPoint, lambda ev: self._on_check(self._by_id[ev.job_id]))
+        e.on(ReconfigPoint, lambda ev: self._on_check(self._by_id[ev.job_id],
+                                                     ev.epoch))
         e.on(ExpandTimeout,
              lambda ev: self._on_expand_timeout(ev.job_id, ev.since))
         e.on(NodeFail, lambda ev: self._on_failure(ev.node))
@@ -206,6 +208,11 @@ class ClusterSimulator:
             self._pending_jobs(),
             [j for j in self.jobs if j.state is JobState.RUNNING],
             self.now, self._runtime_estimate)
+        # Preemption directives (preempt policy) free capacity the returned
+        # starts already count on, so they are applied first.
+        preempted = self.scheduler.pop_preemptions()
+        for job, new in preempted:
+            self._apply_preemption(job, new)
         for job, n in starts:
             self.cluster.allocate(job.job_id, n)
             job.nodes = n
@@ -215,11 +222,17 @@ class ClusterSimulator:
             job.last_progress_t = self.now + self.config.launch_latency_s
             job.paused_until = job.last_progress_t
             job.record_nodes(self.now)
-            self._ckpt_work[job.job_id] = 0.0
+            # Restore point = progress carried into this start (0 for fresh
+            # jobs; preserved work for failure/preemption requeue restarts).
+            self._ckpt_work[job.job_id] = job.work_done
             self._schedule_completion(job)
             if self.config.flexible and job.malleable:
+                # New epoch: a check chain surviving a preemption/failure
+                # requeue must die at the guard, not double the frequency.
+                repoch = self._reconfig_epoch.get(job.job_id, 0) + 1
+                self._reconfig_epoch[job.job_id] = repoch
                 self.engine.schedule(ReconfigPoint(
-                    self._next_check_time(job), job.job_id))
+                    self._next_check_time(job), job.job_id, repoch))
             if self.config.checkpoint_period_s > 0:
                 # New epoch: a chain surviving a requeue/restart goes stale.
                 epoch = self._ckpt_epoch.get(job.job_id, 0) + 1
@@ -227,8 +240,42 @@ class ClusterSimulator:
                 self.engine.schedule(CheckpointTick(
                     self.now + self.config.checkpoint_period_s, job.job_id,
                     epoch))
-        if starts:
+        if starts or preempted:
             self._snapshot()
+
+    def _requeue(self, job: Job, action: str, from_nodes: int, reason: str):
+        """Kill a running job back to the queue; progress survives."""
+        self.cluster.release(job.job_id)
+        job.state = JobState.PENDING
+        job.nodes = 0
+        job.completion_version += 1
+        self._pending_async.pop(job.job_id, None)  # decision is stale now
+        job.record_nodes(self.now)
+        self.actions.append(ActionRecord(
+            self.now, job.job_id, action, 0.0, 0.0, from_nodes, 0,
+            reason=reason))
+
+    def _apply_preemption(self, job: Job, new: int):
+        """Shrink (``new > 0``) or requeue (``new == 0``) a running victim."""
+        if job.state is not JobState.RUNNING:
+            return
+        self._advance(job)
+        old = job.nodes
+        if new <= 0:
+            self._requeue(job, "preempt_requeue", old,
+                          "head-reservation-slip")
+            return
+        self.cluster.resize(job.job_id, new)
+        resize_s = self.config.cost.resize_time(
+            old, new, self._app(job).data_bytes)
+        self._pause(job, resize_s)
+        job.nodes = new
+        job.record_nodes(self.now)
+        self._ckpt_work[job.job_id] = job.work_done   # state moved with it
+        self.actions.append(ActionRecord(
+            self.now, job.job_id, "preempt_shrink", 0.0, resize_s, old, new,
+            reason="head-reservation-slip"))
+        self._schedule_completion(job)
 
     def _next_check_time(self, job: Job) -> float:
         app = self._app(job)
@@ -321,13 +368,14 @@ class ClusterSimulator:
                 still.append(w)
         self._waiting_expands = still
 
-    def _on_check(self, job: Job):
-        if job.state is not JobState.RUNNING:
+    def _on_check(self, job: Job, epoch: int = 0):
+        if job.state is not JobState.RUNNING or \
+                epoch != self._reconfig_epoch.get(job.job_id, 0):
             return
         self._advance(job)
         if any(w["job"].job_id == job.job_id for w in self._waiting_expands):
             self.engine.schedule(ReconfigPoint(self._next_check_time(job),
-                                               job.job_id))
+                                               job.job_id, epoch))
             return
         if self.config.scheduling == "async":
             # Apply the decision scheduled at the previous point…
@@ -346,7 +394,7 @@ class ClusterSimulator:
                         self.now + self.config.expand_timeout_s,
                         job.job_id, self.now))
                     self.engine.schedule(ReconfigPoint(
-                        self._next_check_time(job), job.job_id))
+                        self._next_check_time(job), job.job_id, epoch))
                     return
                 self._apply(job, decision, decide_s, pause_decide=False)
             # …and schedule the next decision concurrently (zero job cost).
@@ -362,7 +410,7 @@ class ClusterSimulator:
             self._apply(job, decision, decide_s)
         if job.state is JobState.RUNNING:
             self.engine.schedule(ReconfigPoint(self._next_check_time(job),
-                                               job.job_id))
+                                               job.job_id, epoch))
 
     # -- events ------------------------------------------------------------------
 
@@ -445,15 +493,9 @@ class ClusterSimulator:
                 survivors + 1, new, reason=f"node{node}-failed"))
             self._schedule_completion(job)
         else:
-            # Rigid job: kill and requeue (checkpoint restart).
-            self.cluster.release(job.job_id)
-            job.state = JobState.PENDING
-            job.nodes = 0
-            job.completion_version += 1
-            job.record_nodes(self.now)
-            self.actions.append(ActionRecord(
-                self.now, job.job_id, "failure_requeue", 0.0, 0.0,
-                survivors + 1, 0, reason=f"node{node}-failed"))
+            # Rigid job (or too few survivors): requeue, checkpoint restart.
+            self._requeue(job, "failure_requeue", survivors + 1,
+                          f"node{node}-failed")
         self._snapshot()
         self._scheduler_pass()
 

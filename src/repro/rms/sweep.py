@@ -1,0 +1,335 @@
+"""Parallel sweep driver: trace × policy × malleability-mix grids.
+
+Trace replays are embarrassingly parallel (ROADMAP "engine-level parallel
+sweeps"): every grid point is an independent, fully-seeded simulation.  This
+module fans a grid of :class:`SweepPoint` across a ``multiprocessing`` pool
+and emits one *versioned* artifact (JSON and/or CSV) whose byte content is
+identical for serial and parallel runs — the golden-artifact regression
+test (``tests/test_sweep_golden.py``) pins this.
+
+Artifact schema (``SCHEMA_ID``/``SCHEMA_VERSION``): a JSON object
+
+.. code-block:: json
+
+    {"schema": "repro.rms.sweep", "version": 1,
+     "grid": {"traces": [...], "policies": [...], "mixes": [[r,m,f], ...]},
+     "results": [{"trace": ..., "policy": ..., "rigid": ..., ...}]}
+
+``results`` rows carry only deterministic fields (no wall-clock times),
+floats rounded to :data:`ROUND_DIGITS` decimals, rows sorted by
+:func:`row_key` — so ``dumps_artifact`` is reproducible byte-for-byte.
+The same row schema is shared by ``benchmarks/trace_replay.py``,
+``benchmarks/table4_throughput.py`` (via :func:`report_row`) and
+``benchmarks/policy_zoo.py``.
+
+CLI (the CI smoke step runs the ``--smoke`` grid with two workers)::
+
+    PYTHONPATH=src python -m repro.rms.sweep --trace tests/data/sample.swf \\
+        --policies easy,sjf --mixes 0:0:1,0.5:0.25:0.25 --workers 2 \\
+        --out sweep.json [--check tests/data/golden_sweep.json] [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import multiprocessing
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+SCHEMA_ID = "repro.rms.sweep"
+SCHEMA_VERSION = 1
+ROUND_DIGITS = 6
+
+#: Fixed CSV column order — the row schema, version ``SCHEMA_VERSION``.
+COLUMNS = ("trace", "policy", "rigid", "moldable", "malleable", "flexible",
+           "scheduling", "num_nodes", "seed", "time_scale", "jobs",
+           "completed", "makespan_s", "util_avg_pct", "util_std_pct",
+           "avg_wait_s", "avg_exec_s", "avg_completion_s", "expands",
+           "shrinks", "preempts", "requeues", "timeouts")
+
+#: Default smoke grid (2 policies × 2 mixes) — also the golden-artifact grid.
+SMOKE_POLICIES = ("easy", "sjf")
+SMOKE_MIXES = ((0.0, 0.0, 1.0), (0.5, 0.25, 0.25))
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """One grid point: everything a worker needs to replay deterministically.
+
+    ``trace`` is a filesystem path; the artifact stores its basename as the
+    trace label so artifacts are machine-independent.
+    """
+    trace: str
+    policy: str
+    mix: Tuple[float, float, float]      # (rigid, moldable, malleable)
+    flexible: bool = True
+    num_nodes: int = 64
+    seed: int = 7
+    scheduling: str = "sync"
+    time_scale: float = 1.0
+    max_jobs: Optional[int] = None
+
+    @property
+    def label(self) -> str:
+        return os.path.basename(self.trace)
+
+
+def build_grid(traces: Sequence[str], policies: Sequence[str],
+               mixes: Sequence[Tuple[float, float, float]],
+               flexibles: Sequence[bool] = (True,),
+               **fixed) -> List[SweepPoint]:
+    """Cross product of the axes; ``fixed`` forwards SweepPoint fields."""
+    return [SweepPoint(trace=t, policy=p, mix=tuple(m), flexible=f, **fixed)
+            for t in traces for p in policies for m in mixes
+            for f in flexibles]
+
+
+# ---------------------------------------------------------------------------
+# Worker
+# ---------------------------------------------------------------------------
+
+def _action_counts(actions) -> Dict[str, int]:
+    out = {"expands": 0, "shrinks": 0, "preempts": 0, "requeues": 0,
+           "timeouts": 0}
+    for a in actions:
+        if a.timed_out:
+            out["timeouts"] += 1
+        elif a.action == "expand":
+            out["expands"] += 1
+        elif a.action == "shrink":
+            out["shrinks"] += 1
+        elif a.action == "preempt_shrink":
+            out["preempts"] += 1
+        elif a.action == "preempt_requeue":
+            out["requeues"] += 1
+    return out
+
+
+def report_row(report, *, trace: str, policy: str,
+               mix: Tuple[float, float, float], flexible: bool,
+               scheduling: str = "sync", seed: int = 7,
+               time_scale: float = 1.0) -> Dict[str, object]:
+    """Serialize a :class:`~repro.rms.simulator.SimReport` into the shared
+    row schema — deterministic fields only, floats rounded."""
+    from repro.rms.job import JobState
+
+    util_avg, util_std = report.utilization()
+    wait, exec_, comp = report.averages()
+    completed = sum(1 for j in report.jobs
+                    if j.state is JobState.COMPLETED)
+    row: Dict[str, object] = {
+        "trace": trace, "policy": policy,
+        "rigid": round(mix[0], ROUND_DIGITS),
+        "moldable": round(mix[1], ROUND_DIGITS),
+        "malleable": round(mix[2], ROUND_DIGITS),
+        "flexible": bool(flexible), "scheduling": scheduling,
+        "num_nodes": report.config.num_nodes, "seed": seed,
+        "time_scale": round(time_scale, ROUND_DIGITS),
+        "jobs": len(report.jobs), "completed": completed,
+        "makespan_s": round(float(report.makespan), ROUND_DIGITS),
+        "util_avg_pct": round(float(util_avg), ROUND_DIGITS),
+        "util_std_pct": round(float(util_std), ROUND_DIGITS),
+        "avg_wait_s": round(float(wait), ROUND_DIGITS),
+        "avg_exec_s": round(float(exec_), ROUND_DIGITS),
+        "avg_completion_s": round(float(comp), ROUND_DIGITS),
+    }
+    row.update(_action_counts(report.actions))
+    return row
+
+
+def run_point(point: SweepPoint) -> Dict[str, object]:
+    """Replay one grid point (top-level: picklable for worker pools)."""
+    from repro.rms.simulator import ClusterSimulator, SimConfig
+    from repro.rms.scheduler import SchedulerConfig
+    from repro.workload.swf import MalleabilityMix, jobs_from_swf, parse_swf
+
+    mix = MalleabilityMix(rigid=point.mix[0], moldable=point.mix[1],
+                          malleable=point.mix[2])
+    trace = parse_swf(point.trace)
+    jobs, apps = jobs_from_swf(trace, num_nodes=point.num_nodes, mix=mix,
+                               seed=point.seed, max_jobs=point.max_jobs,
+                               time_scale=point.time_scale)
+    cfg = SimConfig(num_nodes=point.num_nodes, flexible=point.flexible,
+                    scheduling=point.scheduling, seed=point.seed,
+                    sched=SchedulerConfig(policy=point.policy))
+    report = ClusterSimulator(jobs, cfg, apps=apps).run()
+    return report_row(report, trace=point.label, policy=point.policy,
+                      mix=point.mix, flexible=point.flexible,
+                      scheduling=point.scheduling, seed=point.seed,
+                      time_scale=point.time_scale)
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def row_key(row: Dict[str, object]) -> Tuple:
+    """Canonical sort key: artifact row order is independent of worker
+    completion order."""
+    return (row["trace"], row["policy"], row["rigid"], row["moldable"],
+            row["malleable"], not row["flexible"], row["scheduling"],
+            row["num_nodes"], row["seed"], row["time_scale"])
+
+
+def run_sweep(points: Sequence[SweepPoint], *, workers: int = 0
+              ) -> List[Dict[str, object]]:
+    """Run the grid; ``workers <= 1`` is serial, else a spawn-context pool
+    (spawn: safe after JAX/XLA initialization in the parent)."""
+    points = list(points)
+    if workers <= 1 or len(points) <= 1:
+        rows = [run_point(p) for p in points]
+    else:
+        ctx = multiprocessing.get_context("spawn")
+        with ctx.Pool(min(workers, len(points))) as pool:
+            rows = pool.map(run_point, points)
+    return sorted(rows, key=row_key)
+
+
+def artifact(rows: Sequence[Dict[str, object]],
+             grid: Optional[Dict[str, object]] = None) -> Dict[str, object]:
+    return {"schema": SCHEMA_ID, "version": SCHEMA_VERSION,
+            "grid": grid or {}, "results": list(rows)}
+
+
+def dumps_artifact(doc: Dict[str, object]) -> str:
+    """Canonical byte-stable serialization of an artifact."""
+    return json.dumps(doc, sort_keys=True, indent=2) + "\n"
+
+
+def write_artifact(path: str, doc: Dict[str, object]) -> None:
+    with open(path, "w") as fh:
+        fh.write(dumps_artifact(doc))
+
+
+def load_artifact(path: str) -> Dict[str, object]:
+    with open(path) as fh:
+        doc = json.load(fh)
+    if doc.get("schema") != SCHEMA_ID:
+        raise ValueError(f"not a sweep artifact: schema={doc.get('schema')!r}")
+    if doc.get("version") != SCHEMA_VERSION:
+        raise ValueError(f"sweep artifact version {doc.get('version')} != "
+                         f"supported {SCHEMA_VERSION}")
+    return doc
+
+
+def csv_lines(rows: Sequence[Dict[str, object]]) -> List[str]:
+    lines = [",".join(COLUMNS)]
+    for row in rows:
+        lines.append(",".join(str(row.get(c, "")) for c in COLUMNS))
+    return lines
+
+
+def write_csv(path: str, rows: Sequence[Dict[str, object]]) -> None:
+    with open(path, "w") as fh:
+        fh.write("\n".join(csv_lines(rows)) + "\n")
+
+
+def winners_by_mix(rows: Sequence[Dict[str, object]],
+                   metric: str = "makespan_s") -> Dict[Tuple, str]:
+    """Per (rigid, moldable, malleable) mix: the policy minimizing ``metric``
+    (ties broken by policy name for determinism)."""
+    best: Dict[Tuple, Tuple[float, str]] = {}
+    for row in rows:
+        mix = (row["rigid"], row["moldable"], row["malleable"])
+        cand = (float(row[metric]), str(row["policy"]))
+        if mix not in best or cand < best[mix]:
+            best[mix] = cand
+    return {mix: policy for mix, (_, policy) in best.items()}
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def smoke_grid(trace: str, *, num_nodes: int = 64, seed: int = 7
+               ) -> Tuple[List[SweepPoint], Dict[str, object]]:
+    """The tiny deterministic grid behind ``--smoke`` and the golden
+    artifact (``tests/data/golden_sweep.json``) — keep the two in sync by
+    construction."""
+    points = build_grid([trace], SMOKE_POLICIES, SMOKE_MIXES, (True,),
+                        num_nodes=num_nodes, seed=seed)
+    grid = {"traces": [os.path.basename(trace)],
+            "policies": list(SMOKE_POLICIES),
+            "mixes": [list(m) for m in SMOKE_MIXES],
+            "flexibles": [True], "num_nodes": num_nodes, "seed": seed}
+    return points, grid
+
+
+def parse_mixes(spec: str) -> List[Tuple[float, float, float]]:
+    """``"0:0:1,0.5:0.25:0.25"`` -> [(0,0,1), (0.5,0.25,0.25)]."""
+    mixes = []
+    for part in spec.split(","):
+        vals = tuple(float(x) for x in part.strip().split(":"))
+        if len(vals) != 3:
+            raise ValueError(f"mix needs rigid:moldable:malleable, got "
+                             f"{part!r}")
+        mixes.append(vals)
+    return mixes
+
+
+def main(argv=None) -> int:
+    default_trace = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                                 "tests", "data", "sample.swf")
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trace", action="append", default=None,
+                    help="SWF trace path (repeatable)")
+    ap.add_argument("--policies", default="easy,fcfs")
+    ap.add_argument("--mixes", default="0.2:0.2:0.6",
+                    help="comma list of rigid:moldable:malleable")
+    ap.add_argument("--fixed", action="store_true",
+                    help="also sweep the fixed (non-malleable) configuration")
+    ap.add_argument("--nodes", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--time-scale", type=float, default=1.0)
+    ap.add_argument("--max-jobs", type=int, default=None)
+    ap.add_argument("--workers", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fixed grid (the golden-artifact grid)")
+    ap.add_argument("--out", default=None, help="write JSON artifact here")
+    ap.add_argument("--csv", default=None, help="write CSV artifact here")
+    ap.add_argument("--check", default=None,
+                    help="golden JSON artifact to byte-compare against "
+                         "(exit 1 on mismatch)")
+    args = ap.parse_args(argv)
+
+    traces = args.trace or [os.path.normpath(default_trace)]
+    if args.smoke:
+        points, grid = smoke_grid(traces[0], num_nodes=args.nodes,
+                                  seed=args.seed)
+    else:
+        policies = [p.strip() for p in args.policies.split(",") if p.strip()]
+        mixes = parse_mixes(args.mixes)
+        flexibles = (False, True) if args.fixed else (True,)
+        points = build_grid(traces, policies, mixes, flexibles,
+                            num_nodes=args.nodes, seed=args.seed,
+                            time_scale=args.time_scale,
+                            max_jobs=args.max_jobs)
+        grid = {"traces": [os.path.basename(t) for t in traces],
+                "policies": policies, "mixes": [list(m) for m in mixes],
+                "flexibles": list(flexibles), "num_nodes": args.nodes,
+                "seed": args.seed}
+    rows = run_sweep(points, workers=args.workers)
+    doc = artifact(rows, grid)
+    for line in csv_lines(rows):
+        print(line)
+    if args.out:
+        write_artifact(args.out, doc)
+        print(f"# wrote {args.out} ({len(rows)} rows)")
+    if args.csv:
+        write_csv(args.csv, rows)
+        print(f"# wrote {args.csv}")
+    if args.check:
+        golden = dumps_artifact(load_artifact(args.check))
+        mine = dumps_artifact(doc)
+        if golden != mine:
+            print(f"# MISMATCH against {args.check}: artifact bytes differ "
+                  f"(schema or semantics changed — regenerate the golden "
+                  f"file only for intentional changes)")
+            return 1
+        print(f"# artifact matches {args.check}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -53,13 +53,16 @@ def make_workload(num_jobs: int, *, seed: int = 7,
                   apps: Optional[Dict[str, AppModel]] = None,
                   app_names: Sequence[str] = ("cg", "jacobi", "nbody"),
                   arrival_scale_s: float = 10.0,
-                  malleable: bool = True) -> List[Job]:
+                  malleable: bool = True,
+                  num_users: int = 5) -> List[Job]:
     """The paper's throughput workloads (§7.5): randomly-sorted app jobs,
-    fixed seed, Poisson arrivals, launched at their maximum size."""
+    fixed seed, Poisson arrivals, launched at their maximum size.  Jobs are
+    spread over ``num_users`` submitting users (fair-share accounting)."""
     rng = np.random.default_rng(seed)
     apps = dict(PAPER_APPS if apps is None else apps)
     arrivals = poisson_arrivals(rng, num_jobs, arrival_scale_s)
     choices = rng.choice(len(app_names), size=num_jobs)
+    users = rng.integers(0, max(num_users, 1), size=num_jobs)
     jobs = []
     for i in range(num_jobs):
         app = apps[app_names[choices[i]]]
@@ -69,5 +72,6 @@ def make_workload(num_jobs: int, *, seed: int = 7,
             min_nodes=app.min_nodes, max_nodes=app.max_nodes,
             preferred=app.preferred, factor=2, malleable=malleable,
             check_period_s=app.check_period_s,
-            requested_nodes=app.max_nodes, data_bytes=app.data_bytes))
+            requested_nodes=app.max_nodes, data_bytes=app.data_bytes,
+            user=int(users[i])))
     return jobs

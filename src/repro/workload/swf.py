@@ -18,7 +18,10 @@ This module provides:
 - :func:`jobs_from_swf` — trace → (:class:`repro.rms.job.Job` list,
   per-job ``AppModel`` dict) adapter; each trace job becomes an
   Amdahl-model app calibrated so that running at the recorded size takes
-  the recorded runtime.
+  the recorded runtime.  The SWF ``user_id`` is threaded onto
+  ``Job.user`` (fair-share scheduling); moldable-annotated jobs get a
+  factor-of-two size band around the recorded size so the moldable
+  start-size optimizer has real freedom.
 """
 from __future__ import annotations
 
@@ -217,6 +220,15 @@ def _trace_app(rec: SWFJob, kind: str, num_nodes: int,
         max_nodes = min(base * 2, _pow2_at_most(num_nodes))
         preferred = base
         period = 15.0
+    elif kind == MOLDABLE:
+        # Startable at any power-of-two in a factor-of-two band around the
+        # recorded size (the "moldable" start-size optimizer exploits this),
+        # but never reconfigured after launch.
+        base = _pow2_at_most(size)
+        min_nodes = max(base // 4, 1)
+        max_nodes = min(base * 2, _pow2_at_most(num_nodes))
+        preferred = base
+        period = 0.0
     else:
         base = size
         min_nodes = max_nodes = preferred = size
@@ -262,7 +274,7 @@ def jobs_from_swf(trace: Union[SWFTrace, Sequence[SWFJob]], *,
         app = _trace_app(scaled, kind, num_nodes, serial_frac,
                          data_bytes_per_node)
         apps[app.name] = app
-        start_nodes = (app.preferred if kind == MALLEABLE
+        start_nodes = (app.preferred if kind in (MALLEABLE, MOLDABLE)
                        else app.max_nodes)
         jobs.append(Job(
             job_id=i, app=app.name, submit_time=float(scaled.submit_time),
@@ -271,5 +283,6 @@ def jobs_from_swf(trace: Union[SWFTrace, Sequence[SWFJob]], *,
             preferred=app.preferred, factor=2,
             malleable=(kind == MALLEABLE),
             check_period_s=app.check_period_s,
-            requested_nodes=start_nodes, data_bytes=app.data_bytes))
+            requested_nodes=start_nodes, data_bytes=app.data_bytes,
+            user=max(int(rec.user_id), 0)))
     return jobs, apps

@@ -105,6 +105,44 @@ def test_checkpoint_chain_not_duplicated_after_requeue():
                 assert sum(1 for t in ts if t >= nxt[0]) <= 1
 
 
+def test_reconfig_chain_not_duplicated_after_requeue():
+    """A malleable job requeued (node failure with too few survivors) and
+    restarted within one check period must get a *fresh* ReconfigPoint
+    chain; the stale chain dies at the epoch guard instead of doubling the
+    DMR check frequency (regression: preempt/failure requeues used to leave
+    the old chain live)."""
+    from repro.rms import AppModel, Job, ReconfigPoint
+
+    app = AppModel("x", iterations=100, t1_iter_s=4.0, serial_frac=0.0,
+                   data_bytes=1 << 20, min_nodes=4, max_nodes=4,
+                   preferred=None, check_period_s=5.0)
+    job = Job(job_id=0, app="x", submit_time=0.0, work=100.0,
+              min_nodes=4, max_nodes=4, preferred=None, factor=2,
+              malleable=True, check_period_s=5.0, requested_nodes=4,
+              data_bytes=1 << 20)
+    # Failing one of the job's nodes leaves 3 survivors < min_nodes=4, so
+    # the job requeues — and restarts immediately on the 4+ free nodes.
+    cfg = SimConfig(num_nodes=8, flexible=True, checkpoint_period_s=0.0,
+                    failures=((7.0, 0),))
+    sim = ClusterSimulator([job], cfg, apps={"x": app})
+    ticks = []
+    sim.engine.on(ReconfigPoint, lambda ev: ticks.append((ev.t, ev.epoch)))
+    rep = sim.run()
+    assert any(a.action == "failure_requeue" for a in rep.actions)
+    assert job.end_time > 0                      # restarted and finished
+    epochs = {e for _, e in ticks}
+    assert epochs == {1, 2}                      # exactly one restart
+    t_restart = min(t for t, e in ticks if e == 2)
+    # the superseded chain fires at most once after the new chain starts
+    stale = [t for t, e in ticks if e == 1 and t >= 7.0]
+    assert len(stale) <= 1
+    # and the live chain ticks exactly one period apart
+    live = sorted(t for t, e in ticks if e == 2)
+    assert t_restart == live[0]
+    for a, b in zip(live, live[1:]):
+        assert abs((b - a) - 5.0) < 1e-6
+
+
 def test_trace_exercises_failure_and_reconfig_paths():
     """The golden scenario must stay event-rich, or the regression test
     degrades into a trivial check."""

@@ -1,0 +1,496 @@
+"""Property-based invariants for the policy zoo (sjf / fairshare / preempt /
+moldable) pinned by ISSUE 2: no starvation, usage-monotone priorities,
+capacity-safe preemption, power-of-two moldable starts."""
+import random
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                              # container has no hypothesis
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.rms import (Cluster, Job, JobState, Scheduler, SchedulerConfig)
+from repro.rms.scheduler import (FairSharePolicy, MoldableStartPolicy,
+                                 PreemptiveBackfillPolicy, SJFPolicy)
+
+
+def make_job(job_id, size, submit=0.0, *, min_nodes=1, max_nodes=None,
+             user=0, state=JobState.PENDING, malleable=True, factor=2):
+    j = Job(job_id=job_id, app="cg", submit_time=submit, work=100.0,
+            min_nodes=min_nodes, max_nodes=max_nodes or size,
+            preferred=None, factor=factor, malleable=malleable,
+            requested_nodes=size, user=user)
+    j.state = state
+    if state is JobState.RUNNING:
+        j.nodes = size
+    return j
+
+
+# ---------------------------------------------------------------------------
+# SJF: bounded-age queues never starve the old job
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000))
+def test_sjf_aged_jobs_jump_every_younger_job(seed):
+    """Bounded-age generator: every job past the starvation guard must be
+    ordered ahead of every younger job, whatever the runtime estimates."""
+    rng = random.Random(seed)
+    now = 10_000.0
+    guard = 500.0
+    cfg = SchedulerConfig(policy="sjf", sjf_starvation_age_s=guard)
+    sched = Scheduler(Cluster(64), cfg)
+    pol = sched.policy
+    assert isinstance(pol, SJFPolicy)
+    jobs, est = [], {}
+    n_aged = rng.randint(1, 3)
+    for i in range(n_aged + rng.randint(1, 6)):
+        # first n_aged are past the guard, the rest strictly younger
+        age = (guard + rng.uniform(0, 400) if i < n_aged
+               else rng.uniform(0, guard - 1))
+        jobs.append(make_job(i, rng.choice([1, 2, 4, 8]), now - age))
+        est[i] = rng.uniform(1.0, 5_000.0)   # bounded estimates
+    rng.shuffle(jobs)
+    pol._est = lambda j: est[j.job_id]
+    try:
+        order = pol.order(jobs, now)
+    finally:
+        pol._est = None
+    seen_young = False
+    for j in order:
+        aged = now - j.submit_time >= guard
+        if not aged:
+            seen_young = True
+        assert not (aged and seen_young), \
+            f"aged job {j.job_id} ordered behind a younger one"
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_sjf_prefers_shorter_estimates_at_equal_age(seed):
+    rng = random.Random(seed)
+    now = 100.0
+    sched = Scheduler(Cluster(64), SchedulerConfig(policy="sjf"))
+    pol = sched.policy
+    jobs, est = [], {}
+    for i in range(6):
+        jobs.append(make_job(i, 4, submit=0.0))     # identical age/size
+        est[i] = rng.uniform(1.0, 1000.0)
+    pol._est = lambda j: est[j.job_id]
+    try:
+        order = pol.order(jobs, now)
+    finally:
+        pol._est = None
+    ests = [est[j.job_id] for j in order]
+    assert ests == sorted(ests)
+
+
+def test_sjf_starved_job_starts_first_when_nodes_free():
+    """End-to-end through schedule(): the aged job heads the starts."""
+    sched = Scheduler(Cluster(64),
+                      SchedulerConfig(policy="sjf",
+                                      sjf_starvation_age_s=100.0))
+    old = make_job(0, 8, submit=0.0)              # age 1000: starved
+    quick = make_job(1, 2, submit=950.0)          # age 50, tiny estimate
+    est = {0: 5000.0, 1: 1.0}
+    starts = sched.schedule([quick, old], [], 1000.0,
+                            lambda j: est[j.job_id])
+    assert [j.job_id for j, _ in starts][0] == 0
+
+
+# ---------------------------------------------------------------------------
+# Fairshare: priority monotone (decreasing) in recorded usage
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000))
+def test_fairshare_priority_monotone_in_usage(seed):
+    rng = random.Random(seed)
+    sched = Scheduler(Cluster(64), SchedulerConfig(policy="fairshare"))
+    pol = sched.policy
+    assert isinstance(pol, FairSharePolicy)
+    job = make_job(0, 4, submit=0.0, user=1)
+    now = 500.0
+    usages = sorted(rng.uniform(0, 1e6) for _ in range(6))
+    prios = []
+    for u in usages:
+        pol._usage = {1: u}
+        prios.append(pol.priority(job, now))
+    for (u1, p1), (u2, p2) in zip(zip(usages, prios),
+                                  zip(usages[1:], prios[1:])):
+        assert (p2 < p1) or (u2 == u1), \
+            f"priority not decreasing: usage {u1}->{u2}, prio {p1}->{p2}"
+
+
+def test_fairshare_heavy_user_sinks_below_light_user():
+    sched = Scheduler(Cluster(64), SchedulerConfig(policy="fairshare"))
+    pol = sched.policy
+    heavy = make_job(0, 4, submit=0.0, user=1)
+    light = make_job(1, 4, submit=0.0, user=2)
+    pol.record_usage(1, 1e6)
+    order = pol.order([heavy, light], now=100.0)
+    assert [j.job_id for j in order] == [1, 0]
+
+
+def test_fairshare_usage_decays_toward_zero():
+    cfg = SchedulerConfig(policy="fairshare", fairshare_halflife_s=100.0)
+    pol = Scheduler(Cluster(64), cfg).policy
+    pol.record_usage(1, 1000.0)
+    pol.observe([], now=0.0)          # anchor the clock
+    pol.observe([], now=100.0)        # one half-life
+    assert pol.usage(1) == 500.0
+    pol.observe([], now=1100.0)       # ten more
+    assert pol.usage(1) < 1.0
+
+
+def test_fairshare_charges_completed_job_tail_interval():
+    """A job that completed between two passes is charged up to its
+    end_time (regression: completion passes run after the job leaves the
+    running set, so short jobs used to accrue zero usage)."""
+    import pytest
+
+    pol = Scheduler(Cluster(64), SchedulerConfig(policy="fairshare")).policy
+    j = make_job(0, 4, user=1, state=JobState.RUNNING)
+    j.start_time = 0.0
+    j.record_nodes(0.0)
+    pol.observe([j], 0.0)
+    j.state = JobState.COMPLETED
+    j.end_time = 50.0
+    j.record_nodes(50.0)
+    pol.observe([], 100.0)
+    assert pol.usage(1) == pytest.approx(4 * 50.0)
+
+
+def test_fairshare_charges_job_seen_only_pending():
+    """A job that starts AND completes with no intervening scheduler pass
+    is still billed — tracking starts at first sight (pending) and charges
+    from nodes_history (regression: it used to accrue zero usage)."""
+    import pytest
+
+    pol = Scheduler(Cluster(64), SchedulerConfig(policy="fairshare")).policy
+    j = make_job(0, 4, user=1)                    # PENDING, no history yet
+    pol.observe([j], 0.0)
+    j.state = JobState.RUNNING                    # starts after the pass...
+    j.start_time = 0.0
+    j.nodes = 4
+    j.record_nodes(0.0)
+    j.state = JobState.COMPLETED                  # ...and finishes before
+    j.end_time = 26.0                             # the next one
+    j.record_nodes(26.0)
+    pol.observe([], 26.0)
+    assert pol.usage(1) == pytest.approx(4 * 26.0)
+
+
+def test_fairshare_charges_requeued_job_partial_interval():
+    """A failure/preemption requeue zeroes the allocation mid-interval; the
+    held node-seconds before the requeue must still be billed."""
+    import pytest
+
+    pol = Scheduler(Cluster(64), SchedulerConfig(policy="fairshare")).policy
+    j = make_job(0, 8, user=1, state=JobState.RUNNING)
+    j.record_nodes(0.0)
+    pol.observe([j], 0.0)
+    j.state = JobState.PENDING                    # requeued at t=30
+    j.nodes = 0
+    j.record_nodes(30.0)
+    pol.observe([j], 100.0)
+    assert pol.usage(1) == pytest.approx(8 * 30.0)
+
+
+def test_fairshare_no_overcharge_before_start():
+    """A job that started mid-interval is charged only from its start."""
+    import pytest
+
+    pol = Scheduler(Cluster(64), SchedulerConfig(policy="fairshare")).policy
+    pol.observe([], 0.0)
+    j = make_job(0, 4, user=1, state=JobState.RUNNING)
+    j.start_time = 80.0
+    j.record_nodes(80.0)
+    pol.observe([j], 100.0)
+    assert pol.usage(1) == pytest.approx(4 * 20.0)
+
+
+def test_fairshare_accrues_usage_in_simulation():
+    """End-to-end: serial non-overlapping jobs must leave a non-empty
+    usage ledger (regression: the ledger used to stay empty because every
+    pass saw the job either not-yet-running or already completed)."""
+    from repro.rms import ClusterSimulator, SimConfig
+    from repro.rms.costmodel import PAPER_APPS
+
+    jobs = []
+    for i in range(3):
+        jobs.append(Job(job_id=i, app="cg", submit_time=200.0 * i,
+                        work=100.0, min_nodes=1, max_nodes=4,
+                        preferred=None, malleable=False,
+                        requested_nodes=4, user=1))
+    sim = ClusterSimulator(
+        jobs, SimConfig(num_nodes=64, flexible=False,
+                        sched=SchedulerConfig(policy="fairshare")),
+        apps=dict(PAPER_APPS))
+    rep = sim.run()
+    assert all(j.state is JobState.COMPLETED for j in rep.jobs)
+    assert sum(sim.scheduler.policy._usage.values()) > 0
+
+
+def test_fairshare_boost_still_dominates():
+    pol = Scheduler(Cluster(64), SchedulerConfig(policy="fairshare")).policy
+    job = make_job(0, 4, user=1)
+    job.priority_boost = 1e12
+    pol.record_usage(1, 1e9)
+    assert pol.priority(job, 100.0) == 1e12
+
+
+# ---------------------------------------------------------------------------
+# Preempt: capacity-safe, head never delayed, victims stay factor-valid
+# ---------------------------------------------------------------------------
+
+def preempt_case(seed, *, requeue=False, num_nodes=32):
+    rng = random.Random(seed)
+    cluster = Cluster(num_nodes)
+    cfg = SchedulerConfig(policy="preempt", preempt_grace_s=10.0,
+                          preempt_requeue=requeue)
+    sched = Scheduler(cluster, cfg)
+    running, est = [], {}
+    for i in range(rng.randint(1, 4)):
+        size = rng.choice([2, 4, 8, 16])
+        if cluster.free_nodes < size:
+            break
+        j = make_job(100 + i, size, submit=rng.uniform(0, 5),
+                     min_nodes=rng.choice([1, 2]),
+                     state=JobState.RUNNING,
+                     malleable=rng.random() < 0.8)
+        cluster.allocate(j.job_id, size)
+        est[j.job_id] = rng.uniform(500.0, 5000.0)   # far releases: slip
+        running.append(j)
+    pending = []
+    for i in range(rng.randint(1, 5)):
+        j = make_job(i, rng.choice([2, 4, 8, 16, 32]),
+                     submit=rng.uniform(0, 40))
+        est[j.job_id] = rng.uniform(10.0, 500.0)
+        pending.append(j)
+    return cluster, sched, running, pending, est
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000), st.booleans())
+def test_preempt_never_exceeds_capacity(seed, requeue):
+    cluster, sched, running, pending, est = preempt_case(seed,
+                                                         requeue=requeue)
+    free_before = cluster.free_nodes
+    starts = sched.schedule(pending, running, 60.0,
+                            lambda j: est[j.job_id])
+    plan = sched.pop_preemptions()
+    freed = sum(v.nodes - max(new, 0) for v, new in plan)
+    assert sum(n for _, n in starts) <= free_before + freed
+    # schedule() must not have touched the cluster
+    assert cluster.free_nodes == free_before
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000))
+def test_preempt_head_starts_when_preempting(seed):
+    """If a preemption plan was emitted, the blocked head it was built for
+    must be in the starts — preemption may never delay the head."""
+    cluster, sched, running, pending, est = preempt_case(seed)
+    now = 60.0
+    order = sched.order(list(pending), now)
+    starts = sched.schedule(pending, running, now,
+                            lambda j: est[j.job_id])
+    plan = sched.pop_preemptions()
+    if not plan:
+        return
+    started = {j.job_id for j, _ in starts}
+    # the head := first job in priority order not startable on free nodes
+    free = cluster.free_nodes
+    head = None
+    for j in order:
+        if j.requested_nodes <= free:
+            free -= j.requested_nodes
+        else:
+            head = j
+            break
+    assert head is not None and head.job_id in started
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000), st.booleans())
+def test_preempt_victims_shrink_factor_consistent(seed, requeue):
+    cluster, sched, running, pending, est = preempt_case(seed,
+                                                         requeue=requeue)
+    sched.schedule(pending, running, 60.0, lambda j: est[j.job_id])
+    for victim, new in sched.pop_preemptions():
+        assert victim.malleable
+        if new == 0:
+            assert requeue               # requeue only when enabled
+        else:
+            assert new == victim.nodes // max(victim.factor, 2)
+            assert new >= max(victim.min_nodes, 1)
+
+
+def test_preempt_within_grace_falls_back_to_easy():
+    """Head reservation lands inside the grace window: no preemption."""
+    cluster = Cluster(16)
+    runner = make_job(99, 16, state=JobState.RUNNING, min_nodes=1)
+    cluster.allocate(99, 16)
+    head = make_job(0, 8, submit=0.0)
+    sched = Scheduler(cluster, SchedulerConfig(policy="preempt",
+                                               preempt_grace_s=60.0))
+    est = {99: 30.0, 0: 100.0}          # runner releases in 30 s < grace
+    starts = sched.schedule([head], [runner], 1000.0,
+                            lambda j: est[j.job_id])
+    assert sched.pop_preemptions() == []
+    assert starts == []
+
+
+def test_preempt_simulation_respects_capacity_and_finishes():
+    """End-to-end: a preempting replay never over-allocates the cluster."""
+    from repro.rms import ClusterSimulator, SimConfig
+    from repro.workload import MalleabilityMix, jobs_from_swf, parse_swf
+    import os
+
+    trace = parse_swf(os.path.join(os.path.dirname(__file__), "data",
+                                   "sample.swf"))
+    jobs, apps = jobs_from_swf(
+        trace, num_nodes=32,
+        mix=MalleabilityMix(rigid=0.0, moldable=0.0, malleable=1.0), seed=7)
+    sim = ClusterSimulator(
+        jobs, SimConfig(num_nodes=32, flexible=True,
+                        sched=SchedulerConfig(policy="preempt",
+                                              preempt_grace_s=5.0)),
+        apps=apps)
+    rep = sim.run()
+    assert all(j.state is JobState.COMPLETED for j in rep.jobs)
+    assert all(alloc <= 32 for _, alloc, _, _ in rep.timeline)
+
+
+def test_preempt_requeue_simulation_preserves_progress():
+    """End-to-end through the simulator's requeue branch: a victim at its
+    minimum size is requeued (not shrunk) for a boosted head, restarts
+    later, and its pre-requeue progress survives — both in work_done and in
+    the checkpoint restore point (regression: restart used to reset
+    _ckpt_work to 0, so a later failure erased the preserved progress)."""
+    from repro.rms import AppModel, ClusterSimulator, SimConfig, MAX_PRIORITY
+
+    apps = {
+        # victim: malleable but already at min size -> only requeue frees it
+        "vic": AppModel("vic", iterations=1000, t1_iter_s=8.0,
+                        serial_frac=0.0, data_bytes=1 << 20, min_nodes=8,
+                        max_nodes=8, preferred=None, check_period_s=15.0),
+        # head: rigid, needs the whole cluster
+        "big": AppModel("big", iterations=100, t1_iter_s=16.0,
+                        serial_frac=0.0, data_bytes=0, min_nodes=16,
+                        max_nodes=16, preferred=None, check_period_s=0.0),
+    }
+    victim = Job(job_id=0, app="vic", submit_time=0.0, work=1000.0,
+                 min_nodes=8, max_nodes=8, preferred=None, malleable=True,
+                 check_period_s=15.0, requested_nodes=8, data_bytes=1 << 20)
+    head = Job(job_id=1, app="big", submit_time=20.0, work=100.0,
+               min_nodes=16, max_nodes=16, preferred=None, malleable=False,
+               requested_nodes=16)
+    head.priority_boost = MAX_PRIORITY      # the §4.3 max-priority path
+    sim = ClusterSimulator(
+        [victim, head],
+        SimConfig(num_nodes=16, flexible=True, checkpoint_period_s=0.0,
+                  sched=SchedulerConfig(policy="preempt",
+                                        preempt_grace_s=5.0,
+                                        preempt_requeue=True)))
+    sim.apps = apps
+    rep = sim.run()
+    assert any(a.action == "preempt_requeue" for a in rep.actions)
+    assert all(j.state is JobState.COMPLETED for j in rep.jobs)
+    assert all(alloc <= 16 for _, alloc, _, _ in rep.timeline)
+    # ~19 work units were done before the requeue at t=20; the restart's
+    # restore point must carry them instead of resetting to zero.
+    assert sim._ckpt_work[0] > 0
+    # and the victim's total span reflects the preserved progress: restart
+    # at ~121 s + remaining ~981 iterations, well under a full re-run
+    assert head.end_time < victim.end_time < 1115.0
+
+
+# ---------------------------------------------------------------------------
+# Moldable: power-of-two starts within [min, max]
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000))
+def test_moldable_best_start_is_pow2_in_range(seed):
+    rng = random.Random(seed)
+    pol = Scheduler(Cluster(64), SchedulerConfig(policy="moldable")).policy
+    assert isinstance(pol, MoldableStartPolicy)
+    for _ in range(10):
+        lo = rng.randint(1, 16)
+        hi = rng.randint(lo, 64)
+        size = rng.randint(lo, hi)
+        job = make_job(0, size, min_nodes=lo, max_nodes=hi,
+                       malleable=rng.random() < 0.5)
+        job.data_bytes = rng.choice([0, 1 << 30])
+        free = rng.randint(0, 64)
+        s = pol.best_start(job, free, lambda j: 600.0)
+        if s is None:
+            # nothing viable: no pow2 in [lo, hi] fits free
+            assert all(c > free
+                       for c in pol.candidate_sizes(job)) \
+                or not pol.candidate_sizes(job)
+        else:
+            assert s & (s - 1) == 0          # power of two
+            assert max(job.min_nodes, 1) <= s <= job.max_nodes
+            assert s <= free
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_moldable_schedule_sizes_stay_in_range(seed):
+    rng = random.Random(seed)
+    cluster = Cluster(64)
+    sched = Scheduler(cluster, SchedulerConfig(policy="moldable"))
+    pending = []
+    for i in range(rng.randint(1, 8)):
+        lo = rng.choice([1, 2, 3])
+        hi = rng.choice([4, 8, 16, 32])
+        pending.append(make_job(i, rng.randint(lo, hi), min_nodes=lo,
+                                max_nodes=hi,
+                                submit=rng.uniform(0, 50)))
+    starts = sched.schedule(pending, [], 60.0, lambda j: 600.0)
+    total = 0
+    for j, n in starts:
+        total += n
+        assert max(j.min_nodes, 1) <= n <= j.max_nodes
+        if pol_has_pow2(j):
+            assert n & (n - 1) == 0
+    assert total <= 64
+
+
+def pol_has_pow2(job):
+    return bool(MoldableStartPolicy.candidate_sizes(job))
+
+
+def test_moldable_prefers_larger_size_when_free():
+    """With no reconfig penalty, a bigger power of two means a shorter
+    estimated runtime, so the optimizer takes it."""
+    pol = Scheduler(Cluster(64), SchedulerConfig(policy="moldable")).policy
+    job = make_job(0, 8, min_nodes=1, max_nodes=32)
+    job.data_bytes = 0
+    assert pol.best_start(job, 64, lambda j: 600.0) == 32
+    assert pol.best_start(job, 7, lambda j: 600.0) == 4
+
+
+def test_moldable_reconfig_cost_pulls_toward_preferred():
+    """When redistribution dominates the runtime gain (short job, huge
+    state), overshooting the preferred size is a bad trade and the
+    optimizer stays at the preferred size; with no state to move it takes
+    the largest size instead."""
+    pol = Scheduler(Cluster(64), SchedulerConfig(policy="moldable")).policy
+    job = make_job(0, 8, min_nodes=1, max_nodes=32)
+    job.preferred = 8
+    job.malleable = True
+    job.data_bytes = 1 << 45            # 32 TiB vs a 60 s runtime
+    assert pol.best_start(job, 64, lambda j: 60.0) == 8
+    job.data_bytes = 0
+    assert pol.best_start(job, 64, lambda j: 60.0) == 32
+
+
+def test_moldable_no_pow2_in_range_starts_as_requested():
+    """A range with no power of two (e.g. [5, 7]) starts unchanged."""
+    sched = Scheduler(Cluster(64), SchedulerConfig(policy="moldable"))
+    job = make_job(0, 6, min_nodes=5, max_nodes=7)
+    starts = sched.schedule([job], [], 10.0, lambda j: 600.0)
+    assert starts == [(job, 6)]

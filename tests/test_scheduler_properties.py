@@ -59,7 +59,10 @@ def test_starts_never_exceed_free_nodes(seed, policy):
     sched = Scheduler(cluster, SchedulerConfig(policy=policy))
     starts = sched.schedule(pending, running, now=60.0,
                             runtime_estimate=lambda j: est[j.job_id])
-    assert sum(n for _, n in starts) <= cluster.free_nodes
+    # the preempt policy may free victim nodes before the starts apply
+    freed = sum(v.nodes - max(new, 0)
+                for v, new in sched.pop_preemptions())
+    assert sum(n for _, n in starts) <= cluster.free_nodes + freed
     assert cluster.free_nodes + cluster.allocated_nodes == num_nodes
 
 
@@ -76,7 +79,12 @@ def test_starts_are_pending_and_unique(seed, policy):
     assert len(ids) == len(set(ids))
     pend_ids = {j.job_id for j in pending}
     assert all(i in pend_ids for i in ids)
-    assert all(n == j.requested_nodes for j, n in starts)
+    for j, n in starts:
+        if policy == "moldable":
+            # start-size optimizer: any size within the job's range
+            assert max(j.min_nodes, 1) <= n <= j.max_nodes
+        else:
+            assert n == j.requested_nodes
 
 
 def head_reservation_time(free, head_need, releases):
@@ -181,6 +189,44 @@ def test_fcfs_blocks_behind_head():
     starts = easy.schedule(jobs, [], now=10_000.0,
                            runtime_estimate=lambda j: 100.0)
     assert [j.job_id for j, _ in starts] == [1]   # EASY backfills it
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000))
+def test_conservative_backfill_false_is_fcfs(seed):
+    """``SchedulerConfig.backfill=False`` must be honored by conservative
+    (regression: it used to be silently ignored): without backfill no job
+    may start ahead of a blocked higher-priority job — fcfs semantics."""
+    num_nodes, running, pending, est = rand_case(seed)
+
+    def starts_for(policy, backfill=True):
+        cluster = Cluster(num_nodes)
+        occupy(cluster, running)
+        sched = Scheduler(cluster, SchedulerConfig(policy=policy,
+                                                   backfill=backfill))
+        return sched.schedule(pending, running, now=60.0,
+                              runtime_estimate=lambda j: est[j.job_id])
+
+    cons = starts_for("conservative", backfill=False)
+    fcfs = starts_for("fcfs")
+    assert [(j.job_id, n) for j, n in cons] == \
+        [(j.job_id, n) for j, n in fcfs]
+
+
+def test_conservative_backfill_false_blocks_behind_head():
+    """Pin the honored behavior on the fcfs blocking scenario."""
+    cluster = Cluster(8)
+    jobs = make_jobs([16, 2], [0.0, 9_900.0])
+    jobs[0].requested_nodes = 16
+    sched = Scheduler(cluster, SchedulerConfig(policy="conservative",
+                                               backfill=False))
+    starts = sched.schedule(jobs, [], now=10_000.0,
+                            runtime_estimate=lambda j: 100.0)
+    assert starts == []                  # head blocks; nothing leapfrogs
+    with_bf = Scheduler(cluster, SchedulerConfig(policy="conservative"))
+    starts = with_bf.schedule(jobs, [], now=10_000.0,
+                              runtime_estimate=lambda j: 100.0)
+    assert [j.job_id for j, _ in starts] == [1]   # backfill reserves + fills
 
 
 def test_conservative_skips_job_that_can_never_fit():

@@ -1,0 +1,107 @@
+"""Golden-artifact regression for the parallel sweep driver.
+
+Three locks:
+
+1. The serial smoke-grid sweep (2 policies × 2 mixes on ``sample.swf``)
+   byte-matches the committed ``tests/data/golden_sweep.json``.
+2. The 2-worker parallel run byte-matches the serial run — worker fan-out
+   must never change results or their order.
+3. The artifact schema (version, row columns, canonical serialization) is
+   stable; loading rejects foreign schemas/versions.
+
+Regenerate the golden file (after an *intentional* semantic change) with:
+
+    PYTHONPATH=src:tests python -c \\
+        "import test_sweep_golden as t; t.write_golden()"
+"""
+import json
+import os
+
+import pytest
+
+from repro.rms import sweep
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+TRACE = os.path.join(DATA, "sample.swf")
+GOLDEN = os.path.join(DATA, "golden_sweep.json")
+
+
+def smoke_bytes(workers: int) -> str:
+    points, grid = sweep.smoke_grid(TRACE)
+    rows = sweep.run_sweep(points, workers=workers)
+    return sweep.dumps_artifact(sweep.artifact(rows, grid))
+
+
+def write_golden():
+    with open(GOLDEN, "w") as fh:
+        fh.write(smoke_bytes(0))
+
+
+def golden_bytes() -> str:
+    with open(GOLDEN) as fh:
+        return fh.read()
+
+
+def test_serial_sweep_matches_golden_artifact():
+    assert smoke_bytes(0) == golden_bytes()
+
+
+def test_parallel_two_workers_byte_matches_serial_and_golden():
+    """The acceptance lock: 2-worker fan-out is bit-identical to serial."""
+    par = smoke_bytes(2)
+    assert par == smoke_bytes(0)
+    assert par == golden_bytes()
+
+
+def test_artifact_schema_versioned_and_complete():
+    doc = json.loads(golden_bytes())
+    assert doc["schema"] == sweep.SCHEMA_ID
+    assert doc["version"] == sweep.SCHEMA_VERSION
+    assert len(doc["results"]) == \
+        len(sweep.SMOKE_POLICIES) * len(sweep.SMOKE_MIXES)
+    for row in doc["results"]:
+        assert set(sweep.COLUMNS) <= set(row), \
+            f"row missing columns: {set(sweep.COLUMNS) - set(row)}"
+        assert row["trace"] == "sample.swf"     # label, not a path
+        assert row["completed"] == row["jobs"] == 24
+    # rows sorted by the canonical key
+    keys = [sweep.row_key(r) for r in doc["results"]]
+    assert keys == sorted(keys)
+
+
+def test_csv_lines_follow_column_order():
+    doc = json.loads(golden_bytes())
+    lines = sweep.csv_lines(doc["results"])
+    assert lines[0] == ",".join(sweep.COLUMNS)
+    assert len(lines) == 1 + len(doc["results"])
+    first = lines[1].split(",")
+    assert first[0] == "sample.swf"
+    assert len(first) == len(sweep.COLUMNS)
+
+
+def test_load_artifact_round_trip_and_rejections(tmp_path):
+    doc = sweep.load_artifact(GOLDEN)           # accepts the golden file
+    assert sweep.dumps_artifact(doc) == golden_bytes()
+    bad_schema = tmp_path / "bad_schema.json"
+    bad_schema.write_text(json.dumps({"schema": "nope", "version": 1}))
+    with pytest.raises(ValueError, match="not a sweep artifact"):
+        sweep.load_artifact(str(bad_schema))
+    bad_version = tmp_path / "bad_version.json"
+    bad_version.write_text(json.dumps(
+        {"schema": sweep.SCHEMA_ID, "version": sweep.SCHEMA_VERSION + 1}))
+    with pytest.raises(ValueError, match="version"):
+        sweep.load_artifact(str(bad_version))
+
+
+def test_winners_by_mix_deterministic_tiebreak():
+    rows = [
+        {"rigid": 0.0, "moldable": 0.0, "malleable": 1.0, "policy": "b",
+         "makespan_s": 100.0},
+        {"rigid": 0.0, "moldable": 0.0, "malleable": 1.0, "policy": "a",
+         "makespan_s": 100.0},
+        {"rigid": 1.0, "moldable": 0.0, "malleable": 0.0, "policy": "c",
+         "makespan_s": 50.0},
+    ]
+    winners = sweep.winners_by_mix(rows)
+    assert winners[(0.0, 0.0, 1.0)] == "a"      # tie -> lexicographic
+    assert winners[(1.0, 0.0, 0.0)] == "c"

@@ -1,0 +1,83 @@
+"""Synthetic ~200-job SWF corpus: parser round-trip + scheduler replay.
+
+The corpus (``tests/synthetic_swf.py``) exists so scheduler/sweep tests
+exercise real queueing depth instead of over-fitting to the 24-job
+``sample.swf``.
+"""
+import pytest
+
+from repro.rms import ClusterSimulator, JobState, SchedulerConfig, SimConfig
+from repro.workload import MalleabilityMix, jobs_from_swf, parse_swf
+from synthetic_swf import MAX_NODES, N_JOBS, synthetic_swf
+
+
+def test_generator_is_deterministic():
+    a_lines, a_recs = synthetic_swf()
+    b_lines, b_recs = synthetic_swf()
+    assert a_lines == b_lines
+    assert a_recs == b_recs
+    c_lines, _ = synthetic_swf(seed=999)
+    assert a_lines != c_lines
+
+
+def test_parser_round_trip():
+    """Every generated record survives parse_swf field-for-field."""
+    lines, records = synthetic_swf()
+    trace = parse_swf(lines)
+    assert trace.skipped_lines == 0
+    assert trace.max_nodes == MAX_NODES
+    assert len(trace.jobs) == N_JOBS == len(records)
+    for job, rec in zip(trace.jobs, records):
+        assert job.job_id == rec["job_id"]
+        assert job.submit_time == rec["submit"]
+        assert job.run_time == rec["run"]
+        assert job.allocated_procs == rec["procs"]
+        assert job.requested_procs == rec["procs"]
+        assert job.requested_time == rec["reqtime"]
+        assert job.user_id == rec["user"]
+        assert job.procs == rec["procs"]
+
+
+def test_corpus_shape_is_nontrivial():
+    """The corpus must stay diverse, or downstream tests degrade."""
+    _, records = synthetic_swf()
+    sizes = {r["procs"] for r in records}
+    users = {r["user"] for r in records}
+    assert len(sizes) >= 8           # small and large, pow2 and not
+    assert any(s & (s - 1) for s in sizes)     # non-power-of-two tail
+    assert len(users) == 8
+    assert max(r["procs"] for r in records) <= MAX_NODES
+    submits = [r["submit"] for r in records]
+    assert submits == sorted(submits)
+
+
+def test_adapter_threads_users_and_bounds():
+    lines, records = synthetic_swf()
+    trace = parse_swf(lines)
+    mix = MalleabilityMix(rigid=0.3, moldable=0.3, malleable=0.4)
+    jobs, apps = jobs_from_swf(trace, num_nodes=MAX_NODES, mix=mix, seed=7)
+    assert len(jobs) == N_JOBS
+    assert {j.user for j in jobs} == {r["user"] for r in records}
+    for j, rec in zip(jobs, records):
+        assert j.user == rec["user"]
+        assert 1 <= j.min_nodes <= j.requested_nodes <= j.max_nodes \
+            <= MAX_NODES
+        app = apps[j.app]
+        assert (app.min_nodes, app.max_nodes) == (j.min_nodes, j.max_nodes)
+
+
+@pytest.mark.parametrize("policy", ["easy", "sjf", "fairshare", "preempt",
+                                    "moldable"])
+def test_corpus_replay_completes(policy):
+    """A 60-job slice of the corpus drains under every new policy."""
+    lines, _ = synthetic_swf()
+    trace = parse_swf(lines)
+    mix = MalleabilityMix(rigid=0.2, moldable=0.2, malleable=0.6)
+    jobs, apps = jobs_from_swf(trace, num_nodes=MAX_NODES, mix=mix, seed=7,
+                               max_jobs=60, time_scale=0.2)
+    rep = ClusterSimulator(
+        jobs, SimConfig(num_nodes=MAX_NODES, flexible=True,
+                        sched=SchedulerConfig(policy=policy)),
+        apps=apps).run()
+    assert all(j.state is JobState.COMPLETED for j in rep.jobs)
+    assert rep.makespan > 0
