@@ -1,15 +1,15 @@
 """Policy zoo: which scheduling policy wins per malleability mix?
 
 Replays an SWF trace across *every* registered scheduling policy × a set of
-rigid/moldable/malleable mixes via the parallel sweep driver
+rigid/moldable/malleable/evolving mixes via the parallel sweep driver
 (:mod:`repro.rms.sweep`), then reports the winner (lowest makespan) per
 mix — the Chadha/Zojer-style policy-grid study the ROADMAP "policy zoo"
-item asks for.
+item asks for, now including evolving-heavy workloads (§2 EVOLVING).
 
   PYTHONPATH=src python benchmarks/policy_zoo.py \\
       [--trace tests/data/sample.swf] [--nodes 64] [--workers 4] \\
-      [--mixes 1:0:0,0.2:0.2:0.6,0:0:1] [--metric makespan_s] \\
-      [--artifact zoo.json]
+      [--mixes 1:0:0:0,0.2:0.2:0.6:0,0.2:0.1:0.4:0.3] \\
+      [--metric makespan_s] [--artifact zoo.json]
 """
 from __future__ import annotations
 
@@ -22,7 +22,7 @@ from repro.rms.sweep import (artifact, build_grid, csv_lines, parse_mixes,
 
 DEFAULT_TRACE = os.path.join(os.path.dirname(__file__), "..", "tests",
                              "data", "sample.swf")
-DEFAULT_MIXES = "1:0:0,0.2:0.2:0.6,0:0:1"
+DEFAULT_MIXES = "1:0:0:0,0.2:0.2:0.6:0,0:0:1:0,0.2:0.1:0.4:0.3,0:0:0.3:0.7"
 
 
 def run_zoo(trace: str, *, num_nodes: int = 64, workers: int = 0,
@@ -62,16 +62,16 @@ def main(argv=None):
 
     by_mix = {}
     for row in rows:
-        by_mix.setdefault((row["rigid"], row["moldable"], row["malleable"]),
-                          []).append(row)
+        by_mix.setdefault((row["rigid"], row["moldable"], row["malleable"],
+                           row["evolving"]), []).append(row)
     print(f"\n# winner per mix (lowest {args.metric}):")
-    print(f"{'rigid':>6} {'mold':>6} {'mall':>6}  {'winner':<12} "
-          + " ".join(f"{p:>12}" for p in policies))
+    print(f"{'rigid':>6} {'mold':>6} {'mall':>6} {'evol':>6}  "
+          f"{'winner':<12} " + " ".join(f"{p:>12}" for p in policies))
     for mix in sorted(by_mix):
         vals = {r["policy"]: float(r[args.metric]) for r in by_mix[mix]}
         cells = " ".join(f"{vals.get(p, float('nan')):12.0f}"
                          for p in policies)
-        print(f"{mix[0]:6.2f} {mix[1]:6.2f} {mix[2]:6.2f}  "
+        print(f"{mix[0]:6.2f} {mix[1]:6.2f} {mix[2]:6.2f} {mix[3]:6.2f}  "
               f"{winners[mix]:<12} {cells}")
 
     if args.artifact:

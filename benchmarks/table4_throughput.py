@@ -28,7 +28,7 @@ def main(quick: bool = False, policy: str = "easy",
         for flexible, rep in ((False, base), (True, flex)):
             rows.append(report_row(
                 rep, trace=f"feitelson-{n}", policy=policy,
-                mix=(0.0, 0.0, 1.0), flexible=flexible))
+                mix=(0.0, 0.0, 1.0, 0.0), flexible=flexible))
         bw, be, bc = base.averages()
         fw, fe, fc = flex.averages()
         for name, rep, (w, e, c) in (("fixed", base, (bw, be, bc)),
@@ -53,7 +53,7 @@ def main(quick: bool = False, policy: str = "easy",
         print(f"# claim[{name}]: {ok}")
     if artifact_path:
         grid = {"traces": [f"feitelson-{n}" for n in sizes],
-                "policies": [policy], "mixes": [[0.0, 0.0, 1.0]],
+                "policies": [policy], "mixes": [[0.0, 0.0, 1.0, 0.0]],
                 "flexibles": [False, True], "num_nodes": 64, "seed": 7}
         # canonical row order: the schema promises row_key-sorted results
         write_artifact(artifact_path,

@@ -11,7 +11,8 @@ versioned artifact schema (``--artifact``).
   PYTHONPATH=src python benchmarks/trace_replay.py \\
       [--trace tests/data/sample.swf] [--nodes 64] \\
       [--policies easy,fcfs] [--malleable 0.6] [--moldable 0.2] \\
-      [--time-scale 1.0] [--max-jobs N] [--workers 4] [--artifact out.json]
+      [--evolving 0.0] [--time-scale 1.0] [--max-jobs N] [--workers 4] \\
+      [--artifact out.json]
 """
 from __future__ import annotations
 
@@ -32,6 +33,7 @@ def main(argv=None):
     ap.add_argument("--policies", default="easy,fcfs")
     ap.add_argument("--malleable", type=float, default=0.6)
     ap.add_argument("--moldable", type=float, default=0.2)
+    ap.add_argument("--evolving", type=float, default=0.0)
     ap.add_argument("--time-scale", type=float, default=1.0)
     ap.add_argument("--max-jobs", type=int, default=None)
     ap.add_argument("--seed", type=int, default=7)
@@ -40,15 +42,15 @@ def main(argv=None):
                     help="write the versioned sweep JSON artifact here")
     args = ap.parse_args(argv)
 
-    mix = (max(0.0, 1.0 - args.malleable - args.moldable),
-           args.moldable, args.malleable)
+    mix = (max(0.0, 1.0 - args.malleable - args.moldable - args.evolving),
+           args.moldable, args.malleable, args.evolving)
     policies = [p.strip() for p in args.policies.split(",") if p.strip()]
     trace = parse_swf(args.trace)
     print(f"# trace: {args.trace} ({len(trace.jobs)} jobs, "
           f"{trace.skipped_lines} skipped lines, "
           f"MaxNodes={trace.max_nodes})")
     print(f"# mix: rigid={mix[0]:.2f} moldable={mix[1]:.2f} "
-          f"malleable={mix[2]:.2f}")
+          f"malleable={mix[2]:.2f} evolving={mix[3]:.2f}")
     points = build_grid([args.trace], policies, [mix], (False, True),
                         num_nodes=args.nodes, seed=args.seed,
                         time_scale=args.time_scale, max_jobs=args.max_jobs)

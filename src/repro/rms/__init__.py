@@ -2,9 +2,10 @@
 from repro.rms.cluster import Cluster
 from repro.rms.costmodel import PAPER_APPS, AppModel, ReconfigCostModel, lm_app_model
 from repro.rms.engine import (CheckpointTick, Event, ExpandTimeout, JobFinish,
-                              JobSubmit, NodeFail, ReconfigPoint,
-                              SimulationEngine, StragglerOnset, StragglerScan)
-from repro.rms.job import Job, JobState
+                              JobSubmit, NodeFail, PhaseChange,
+                              ReconfigPoint, SimulationEngine,
+                              StragglerOnset, StragglerScan)
+from repro.rms.job import Job, JobPhase, JobState
 from repro.rms.policy import PolicyConfig, ReconfigPolicy, factor_sizes
 from repro.rms.scheduler import (MAX_PRIORITY, POLICY_REGISTRY,
                                  FairSharePolicy, MoldableStartPolicy,
@@ -15,7 +16,7 @@ from repro.rms.simulator import (ActionRecord, ClusterSimulator, SimConfig,
                                  SimReport)
 
 __all__ = ["Cluster", "PAPER_APPS", "AppModel", "ReconfigCostModel",
-           "lm_app_model", "Job", "JobState", "PolicyConfig",
+           "lm_app_model", "Job", "JobPhase", "JobState", "PolicyConfig",
            "ReconfigPolicy", "factor_sizes", "MAX_PRIORITY", "Scheduler",
            "SchedulerConfig", "SchedulingPolicy", "POLICY_REGISTRY",
            "SJFPolicy", "FairSharePolicy", "PreemptiveBackfillPolicy",
@@ -23,5 +24,5 @@ __all__ = ["Cluster", "PAPER_APPS", "AppModel", "ReconfigCostModel",
            "make_policy", "register_policy", "ActionRecord",
            "ClusterSimulator", "SimConfig", "SimReport",
            "SimulationEngine", "Event", "JobSubmit", "JobFinish",
-           "ReconfigPoint", "ExpandTimeout", "NodeFail", "StragglerOnset",
-           "StragglerScan", "CheckpointTick"]
+           "ReconfigPoint", "ExpandTimeout", "NodeFail", "PhaseChange",
+           "StragglerOnset", "StragglerScan", "CheckpointTick"]

@@ -21,10 +21,11 @@ shrinks pay an extra synchronization term per participant (§5.2.2).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 from repro.core.actions import Action
 from repro.core.redistribute import expand_plan, shrink_plan, transfer_time_s
+from repro.rms.job import JobPhase
 
 GiB = 1024 ** 3
 
@@ -40,15 +41,21 @@ class AppModel:
     max_nodes: int
     preferred: Optional[int]
     check_period_s: float     # 0 => check at every iteration (Table 1 "-")
+    # EVOLVING (§2): per-phase demand bands + serial-fraction/data-size
+    # overrides; empty for the paper's fixed-demand applications.  The
+    # ``min_nodes``/``max_nodes``/``preferred`` above are the envelope.
+    phases: Tuple[JobPhase, ...] = ()
 
-    def iter_time(self, nodes: int) -> float:
+    def iter_time(self, nodes: int,
+                  serial_frac: Optional[float] = None) -> float:
         p = max(nodes, 1)
-        return self.t1_iter_s * (self.serial_frac
-                                 + (1.0 - self.serial_frac) / p)
+        s = self.serial_frac if serial_frac is None else serial_frac
+        return self.t1_iter_s * (s + (1.0 - s) / p)
 
-    def rate(self, nodes: int) -> float:
+    def rate(self, nodes: int,
+             serial_frac: Optional[float] = None) -> float:
         """Work units (iterations) per second."""
-        return 1.0 / self.iter_time(nodes)
+        return 1.0 / self.iter_time(nodes, serial_frac)
 
     def exec_time(self, nodes: int) -> float:
         return self.iterations * self.iter_time(nodes)

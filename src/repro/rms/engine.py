@@ -19,6 +19,12 @@ Event              Paper section
                    is taken (synchronous or asynchronous, §5.1).
 ``ExpandTimeout``  §5.2.1 / Table 2 — the asynchronous resizer-job (RJ)
                    reservation expires; the pathological async wait ceiling.
+                   Carries an ``epoch`` so a requeue structurally kills the
+                   pending timeout instead of relying on float equality.
+``PhaseChange``    §2 taxonomy EVOLVING — the application enters its next
+                   phase and announces a new ``(min, max, preferred)``
+                   demand band; the handler updates the live band and
+                   forces an immediate DMR check (§5.2 hook).
 ``NodeFail``       beyond-paper fault path: shrink-to-survivors for
                    malleable jobs, checkpoint requeue for rigid ones (§8's
                    deployment argument).
@@ -39,7 +45,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Callable, Dict, List, Tuple, Type
+from typing import Callable, Dict, List, Optional, Tuple, Type
 
 
 # ---------------------------------------------------------------------------
@@ -73,6 +79,7 @@ class ReconfigPoint(Event):
 class ExpandTimeout(Event):
     job_id: int
     since: float          # identifies which pending wait this timeout guards
+    epoch: int = 0        # invalidated structurally when the job requeues
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +102,22 @@ class StragglerScan(Event):
 class CheckpointTick(Event):
     job_id: int
     epoch: int = 0        # invalidates a chain left over from a prior start
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseChange(Event):
+    """An EVOLVING job enters phase ``phase`` and demands a new band.
+
+    The event carries the band so the handler applies exactly what the
+    application announced; ``epoch`` guards against stale events left over
+    from a prior start/resize prediction (same pattern as ReconfigPoint).
+    """
+    job_id: int
+    phase: int            # index of the phase being entered
+    min_nodes: int
+    max_nodes: int
+    preferred: Optional[int] = None
+    epoch: int = 0        # invalidates a prediction from a prior start
 
 
 Handler = Callable[[Event], None]

@@ -19,6 +19,41 @@ class JobState(enum.Enum):
     CANCELLED = "cancelled"
 
 
+def clamp_band(min_nodes: int, max_nodes: int, preferred: Optional[int],
+               cap: int) -> Tuple[int, int, Optional[int]]:
+    """Pin ``1 <= min <= preferred <= max <= cap``.
+
+    The single source of the band invariant — used by the SWF adapter, the
+    synthetic evolving schedules, and the simulator's PhaseChange handler.
+    Without it, a recorded size far above the simulated cluster (or an
+    aggressive evolving phase band) could invert the band into one no
+    scheduler can satisfy.
+    """
+    hi = max(1, min(max_nodes, cap))
+    lo = max(1, min(min_nodes, hi))
+    if preferred is None:
+        return lo, hi, None
+    return lo, hi, min(max(preferred, lo), hi)
+
+
+@dataclasses.dataclass(frozen=True)
+class JobPhase:
+    """One phase of an EVOLVING job (§2 taxonomy).
+
+    The application consumes ``work`` work units in this phase while
+    demanding the ``(min_nodes, max_nodes, preferred)`` band; the optional
+    per-phase ``serial_frac``/``data_bytes`` override the app model's so the
+    execution rate and the reconfiguration cost stay honest across phases
+    (``None`` inherits the app-level value).
+    """
+    work: float
+    min_nodes: int
+    max_nodes: int
+    preferred: Optional[int] = None
+    serial_frac: Optional[float] = None
+    data_bytes: Optional[int] = None
+
+
 @dataclasses.dataclass
 class Job:
     job_id: int
@@ -34,6 +69,11 @@ class Job:
     requested_nodes: int = 0      # submission size (paper: launched at max)
     data_bytes: int = 0           # redistributed state size (FS: 1 GB)
     user: int = 0                 # submitting user (fair-share accounting)
+    # Phase schedule for EVOLVING jobs (empty: demand fixed for the whole
+    # run).  ``min_nodes``/``max_nodes``/``preferred`` above are the *live*
+    # band — the PhaseChange handler rewrites them per phase, and every
+    # scheduling policy must consult them instead of submission-time copies.
+    phases: Tuple[JobPhase, ...] = ()
 
     # -- dynamic state (owned by the RMS / simulator) ------------------------
     state: JobState = JobState.PENDING
@@ -46,12 +86,30 @@ class Job:
     paused_until: float = -1.0    # reconfiguration in progress
     completion_version: int = 0   # invalidates stale completion events
     resizer_for: Optional[int] = None   # this job is an RJ for job `id`
+    phase_index: int = 0                # current phase (EVOLVING jobs)
     nodes_history: List[Tuple[float, int]] = dataclasses.field(
         default_factory=list)
 
     def __post_init__(self):
         if self.requested_nodes == 0:
             self.requested_nodes = self.max_nodes
+
+    @property
+    def evolving(self) -> bool:
+        return bool(self.phases)
+
+    def current_phase(self) -> Optional[JobPhase]:
+        if not self.phases:
+            return None
+        return self.phases[min(self.phase_index, len(self.phases) - 1)]
+
+    def phase_boundary(self) -> Optional[float]:
+        """Cumulative work at the end of the current phase; None when the
+        job is in its last phase (completion ends it) or has no phases."""
+        nxt = self.phase_index + 1
+        if not self.phases or nxt >= len(self.phases):
+            return None
+        return sum(ph.work for ph in self.phases[:nxt])
 
     # -- metrics (paper §7.4/§7.5 definitions) -------------------------------
     @property

@@ -41,6 +41,15 @@ Shared priority: ``age_weight * age + size_weight * (1 - size/cluster)
 + boost`` where *boost* is the maximum-priority path used for resizer jobs
 and for queued jobs that triggered a wide-optimization shrink (§4.3).
 
+Evolving jobs (§2 EVOLVING): policies read ``Job.min_nodes`` /
+``Job.max_nodes`` / ``Job.preferred`` / ``Job.requested_nodes`` at
+schedule time — these are the *live* band, rewritten by the simulator's
+``PhaseChange`` handler each time the application enters a new phase.  No
+policy may cache submission-time copies: the malleable release estimate,
+the preempt victim shrink floor, and the moldable candidate sizes all
+follow the current phase automatically because they go through the live
+fields.
+
 Select a policy via ``SchedulerConfig(policy="conservative")`` — reachable
 from ``SimConfig(sched=...)`` — or register new ones with
 ``@register_policy("name")``.
@@ -315,6 +324,10 @@ class MalleableEasyPolicy(EasyBackfillPolicy):
     an early release when placing the head reservation.  The reservation
     lands earlier, backfill windows shrink, and queued jobs start sooner —
     the scheduler-side half of the paper's productivity argument.
+
+    ``j.min_nodes`` here is the *live* band floor: for an evolving job it
+    reflects the current phase, so a phase that raises the floor stops this
+    policy from counting a shrink that the DMR check would no longer grant.
     """
 
     def _releases(self, running, now, runtime_estimate):

@@ -13,7 +13,10 @@ measurements:
 
 Beyond the paper: node-failure and straggler events exercise the
 fault-tolerance paths (shrink-to-survivors, checkpoint restart, slice
-migration) that make the same mechanism deployable at scale.
+migration) that make the same mechanism deployable at scale, and
+``PhaseChange`` events realize the §2 EVOLVING class — jobs whose demand
+band changes per phase at the application's initiative, renegotiated
+through the same §5.2 DMR check as malleable resizes.
 
 The discrete-event mechanics live in :mod:`repro.rms.engine`; this module
 registers one handler per event type, so new scenario classes are new
@@ -31,10 +34,10 @@ from repro.core.actions import Action, Decision
 from repro.rms.cluster import Cluster
 from repro.rms.costmodel import PAPER_APPS, AppModel, ReconfigCostModel
 from repro.rms.engine import (CheckpointTick, ExpandTimeout, JobFinish,
-                              JobSubmit, NodeFail, ReconfigPoint,
-                              SimulationEngine, StragglerOnset,
-                              StragglerScan)
-from repro.rms.job import Job, JobState
+                              JobSubmit, NodeFail, PhaseChange,
+                              ReconfigPoint, SimulationEngine,
+                              StragglerOnset, StragglerScan)
+from repro.rms.job import Job, JobState, clamp_band
 from repro.rms.policy import PolicyConfig, ReconfigPolicy
 from repro.rms.scheduler import MAX_PRIORITY, Scheduler, SchedulerConfig
 
@@ -130,6 +133,8 @@ class ClusterSimulator:
         self._ckpt_work: Dict[int, float] = {}
         self._ckpt_epoch: Dict[int, int] = {}    # active tick chain per job
         self._reconfig_epoch: Dict[int, int] = {}  # active check chain / job
+        self._phase_epoch: Dict[int, int] = {}   # live phase prediction / job
+        self._expand_epoch: Dict[int, int] = {}  # live expand waits / job
         self._wall_decide_s: List[float] = []
         self._wire_handlers()
 
@@ -147,7 +152,9 @@ class ClusterSimulator:
         e.on(ReconfigPoint, lambda ev: self._on_check(self._by_id[ev.job_id],
                                                      ev.epoch))
         e.on(ExpandTimeout,
-             lambda ev: self._on_expand_timeout(ev.job_id, ev.since))
+             lambda ev: self._on_expand_timeout(ev.job_id, ev.since,
+                                                ev.epoch))
+        e.on(PhaseChange, self._on_phase_change)
         e.on(NodeFail, lambda ev: self._on_failure(ev.node))
         e.on(StragglerOnset,
              lambda ev: self._on_straggler(ev.node, ev.slowdown))
@@ -158,8 +165,20 @@ class ClusterSimulator:
     def _app(self, job: Job) -> AppModel:
         return self.apps[job.app]
 
+    def _serial_frac(self, job: Job) -> Optional[float]:
+        """Per-phase serial-fraction override (None: app default)."""
+        ph = job.current_phase()
+        return None if ph is None else ph.serial_frac
+
+    def _data_bytes(self, job: Job) -> int:
+        """State moved on reconfiguration — per-phase when evolving."""
+        ph = job.current_phase()
+        if ph is not None and ph.data_bytes is not None:
+            return ph.data_bytes
+        return self._app(job).data_bytes
+
     def _rate(self, job: Job) -> float:
-        return (self._app(job).rate(job.nodes)
+        return (self._app(job).rate(job.nodes, self._serial_frac(job))
                 * self.cluster.job_rate_factor(job.job_id))
 
     def _advance(self, job: Job):
@@ -184,6 +203,27 @@ class ClusterSimulator:
         t_end = t0 + remaining / self._rate(job)
         self.engine.schedule(JobFinish(t_end, job.job_id,
                                        job.completion_version))
+        self._schedule_phase_change(job, t0)
+
+    def _schedule_phase_change(self, job: Job, t0: float):
+        """(Re)predict when the running job crosses its next phase boundary.
+
+        Called alongside every completion (re)scheduling — both predictions
+        depend on the same ``(work_done, rate, paused_until)`` state, so
+        they stay consistent by construction.  The epoch bump invalidates
+        any prediction from a prior start/resize.
+        """
+        epoch = self._phase_epoch.get(job.job_id, 0) + 1
+        self._phase_epoch[job.job_id] = epoch
+        boundary = job.phase_boundary()
+        if boundary is None or boundary >= job.work - 1e-9:
+            return
+        to_go = max(boundary - job.work_done, 0.0)
+        nxt = job.phases[job.phase_index + 1]
+        self.engine.schedule(PhaseChange(
+            t0 + to_go / self._rate(job), job.job_id,
+            job.phase_index + 1, nxt.min_nodes, nxt.max_nodes,
+            nxt.preferred, epoch))
 
     def _snapshot(self):
         running = sum(1 for j in self.jobs if j.state is JobState.RUNNING)
@@ -198,7 +238,7 @@ class ClusterSimulator:
         app = self._app(job)
         nodes = job.nodes or job.requested_nodes
         remaining = max(job.work - job.work_done, 0.0)
-        return remaining / app.rate(nodes)
+        return remaining / app.rate(nodes, self._serial_frac(job))
 
     # -- scheduling ------------------------------------------------------------
 
@@ -243,6 +283,51 @@ class ClusterSimulator:
         if starts or preempted:
             self._snapshot()
 
+    def _drop_waiting_expands(self, job_id: int) -> bool:
+        """Structurally void a job's pending expand waits: remove the wait
+        entries, release the RJ reservation, and bump the epoch so any
+        in-flight ``ExpandTimeout`` dies at its guard instead of matching a
+        stale ``(job_id, since)`` pair.  Returns True when a wait (and its
+        reservation) was actually dropped."""
+        self._expand_epoch[job_id] = self._expand_epoch.get(job_id, 0) + 1
+        kept = [w for w in self._waiting_expands
+                if w["job"].job_id != job_id]
+        dropped = len(kept) != len(self._waiting_expands)
+        if dropped:
+            self.cluster.release(-(job_id + 1))
+        self._waiting_expands = kept
+        return dropped
+
+    def _apply_phase_band(self, job: Job, phase_idx: int, min_nodes: int,
+                          max_nodes: int, preferred: Optional[int]):
+        """Make ``phase_idx`` the live phase with the announced band:
+        rewrite the job's band (clamped to the cluster) and keep the
+        restart size inside it."""
+        job.phase_index = phase_idx
+        lo, hi, pref = clamp_band(min_nodes, max_nodes, preferred,
+                                  self.config.num_nodes)
+        job.min_nodes, job.max_nodes, job.preferred = lo, hi, pref
+        job.requested_nodes = min(max(job.requested_nodes, lo), hi)
+
+    def _sync_phase_to_work(self, job: Job):
+        """A checkpoint restore can rewind ``work_done`` into an earlier
+        phase; re-derive the live phase/band from the preserved progress so
+        the queued job advertises the demand it will actually resume with
+        (the skipped transitions re-fire as the replayed work crosses the
+        boundaries again)."""
+        if not job.phases:
+            return
+        cum, idx = 0.0, len(job.phases) - 1
+        for i, ph in enumerate(job.phases):
+            cum += ph.work
+            if job.work_done < cum - 1e-9:
+                idx = i
+                break
+        if idx != job.phase_index:
+            ph = job.phases[idx]
+            self._apply_phase_band(job, idx, ph.min_nodes, ph.max_nodes,
+                                   ph.preferred)
+
     def _requeue(self, job: Job, action: str, from_nodes: int, reason: str):
         """Kill a running job back to the queue; progress survives."""
         self.cluster.release(job.job_id)
@@ -250,6 +335,11 @@ class ClusterSimulator:
         job.nodes = 0
         job.completion_version += 1
         self._pending_async.pop(job.job_id, None)  # decision is stale now
+        self._drop_waiting_expands(job.job_id)     # RJ wait is stale too
+        # a stale phase prediction must not fire against the restart
+        self._phase_epoch[job.job_id] = \
+            self._phase_epoch.get(job.job_id, 0) + 1
+        self._sync_phase_to_work(job)
         job.record_nodes(self.now)
         self.actions.append(ActionRecord(
             self.now, job.job_id, action, 0.0, 0.0, from_nodes, 0,
@@ -267,7 +357,7 @@ class ClusterSimulator:
             return
         self.cluster.resize(job.job_id, new)
         resize_s = self.config.cost.resize_time(
-            old, new, self._app(job).data_bytes)
+            old, new, self._data_bytes(job))
         self._pause(job, resize_s)
         job.nodes = new
         job.record_nodes(self.now)
@@ -279,18 +369,25 @@ class ClusterSimulator:
 
     def _next_check_time(self, job: Job) -> float:
         app = self._app(job)
-        period = app.check_period_s or app.iter_time(job.nodes)
+        period = app.check_period_s or \
+            app.iter_time(job.nodes, self._serial_frac(job))
         return max(self.now, job.paused_until) + period
 
     # -- the DMR check (paper §5) ----------------------------------------------
 
     def _decide(self, job: Job) -> Tuple[Decision, float]:
         app = self._app(job)
+        # EVOLVING jobs negotiate over their *live* band (rewritten by the
+        # PhaseChange handler); fixed-demand jobs keep the app model's.
+        if job.evolving:
+            lo, hi, pref = job.min_nodes, job.max_nodes, job.preferred
+        else:
+            lo, hi, pref = app.min_nodes, app.max_nodes, app.preferred
         wall0 = _time.perf_counter()
         decision = self.policy.decide(
             self.cluster, self._pending_jobs(), job,
-            minimum=app.min_nodes, maximum=app.max_nodes,
-            factor=job.factor, preferred=app.preferred)
+            minimum=lo, maximum=hi,
+            factor=job.factor, preferred=pref)
         wall = _time.perf_counter() - wall0  # real policy latency (measured)
         self._wall_decide_s.append(wall)
         nodes_involved = max(job.nodes, decision.new_slices)
@@ -317,7 +414,8 @@ class ClusterSimulator:
                 self.now, job.job_id, "expand", decide_s, waited_s, old, old,
                 timed_out=True, reason="stale-grant"))
             return
-        resize_s = self.config.cost.resize_time(old, new, app.data_bytes)
+        resize_s = self.config.cost.resize_time(old, new,
+                                                self._data_bytes(job))
         self.cluster.resize(job.job_id, new)
         # Async mode hides the scheduling latency behind the previous step
         # (§5.1: "the communication overhead in that step is avoided").
@@ -392,7 +490,8 @@ class ClusterSimulator:
                         since=self.now))
                     self.engine.schedule(ExpandTimeout(
                         self.now + self.config.expand_timeout_s,
-                        job.job_id, self.now))
+                        job.job_id, self.now,
+                        self._expand_epoch.get(job.job_id, 0)))
                     self.engine.schedule(ReconfigPoint(
                         self._next_check_time(job), job.job_id, epoch))
                     return
@@ -434,7 +533,9 @@ class ClusterSimulator:
         self._snapshot()
         self._scheduler_pass()
 
-    def _on_expand_timeout(self, job_id: int, since: float):
+    def _on_expand_timeout(self, job_id: int, since: float, epoch: int = 0):
+        if epoch != self._expand_epoch.get(job_id, 0):
+            return          # requeue/phase-change voided this wait chain
         for w in list(self._waiting_expands):
             if w["job"].job_id == job_id and w["since"] == since:
                 self._waiting_expands.remove(w)
@@ -461,6 +562,48 @@ class ClusterSimulator:
         self.engine.schedule(CheckpointTick(
             self.now + self.config.checkpoint_period_s, job_id, epoch))
 
+    def _on_phase_change(self, ev: PhaseChange):
+        """EVOLVING (§2): the application enters its next phase.
+
+        Applies the band the event carries to the job's *live*
+        ``min_nodes``/``max_nodes``/``preferred`` (every scheduling policy
+        reads those, so the new demand is visible at the next pass), voids
+        any outstanding expand wait negotiated under the old band, and
+        forces an immediate DMR check (§5.2) on a fresh epoch so the RMS
+        reacts now instead of at the next periodic point.
+        """
+        job = self._by_id.get(ev.job_id)
+        if job is None or job.state is not JobState.RUNNING or \
+                ev.epoch != self._phase_epoch.get(ev.job_id, 0):
+            return
+        self._advance(job)
+        boundary = sum(ph.work for ph in job.phases[:ev.phase])
+        if job.work_done < boundary - 1e-9:
+            # prediction went stale without a reschedule (e.g. a straggler
+            # slowed the rate after it was made): re-predict from actual
+            # progress, same pattern as _on_complete
+            self._schedule_phase_change(job, max(self.now, job.paused_until))
+            return
+        # apply exactly the band the application announced in the event
+        self._apply_phase_band(job, ev.phase, ev.min_nodes, ev.max_nodes,
+                               ev.preferred)
+        self.actions.append(ActionRecord(
+            self.now, job.job_id, "phase_change", 0.0, 0.0,
+            job.nodes, job.nodes, reason=f"phase{ev.phase}"))
+        # an expand wait negotiated under the old band is void; if its RJ
+        # reservation held nodes, offer them to the queue now (same as the
+        # timeout path) instead of letting them idle until the next event
+        if self._drop_waiting_expands(job.job_id):
+            self._scheduler_pass()
+        self._pending_async.pop(job.job_id, None)
+        # rate may have changed (per-phase serial fraction): re-predict
+        # completion and the next boundary
+        self._schedule_completion(job)
+        if self.config.flexible and job.malleable:
+            repoch = self._reconfig_epoch.get(job.job_id, 0) + 1
+            self._reconfig_epoch[job.job_id] = repoch
+            self.engine.schedule(ReconfigPoint(self.now, job.job_id, repoch))
+
     def _on_failure(self, node: int):
         owner = self.cluster.fail_node(node)
         self.cluster.num_nodes -= 1
@@ -470,12 +613,18 @@ class ClusterSimulator:
         job = self._by_id[owner]
         self._advance(job)
         job.work_done = self._ckpt_work.get(job.job_id, 0.0)  # ckpt restore
+        # the restore may rewind into an earlier phase: the live band (and
+        # the min-nodes test below) must reflect the phase being resumed
+        self._sync_phase_to_work(job)
         survivors = self.cluster.allocation(job.job_id)
-        if job.malleable and survivors >= self._app(job).min_nodes:
+        # live band floor: for evolving jobs the current phase's minimum,
+        # not the submission-time envelope (identical for fixed-demand jobs)
+        min_floor = job.min_nodes if job.evolving else \
+            self._app(job).min_nodes
+        if job.malleable and survivors >= min_floor:
             # Shrink-to-survivors: largest factor-consistent size that fits.
             new = job.nodes
-            while new > survivors or (new != survivors and
-                                      new > self._app(job).min_nodes):
+            while new > survivors or (new != survivors and new > min_floor):
                 if new % job.factor or new // job.factor < 1:
                     break
                 new //= job.factor
@@ -484,7 +633,7 @@ class ClusterSimulator:
             new = max(min(new, survivors), 1)
             self.cluster.resize(job.job_id, new)
             resize_s = self.config.cost.resize_time(
-                job.nodes, new, self._app(job).data_bytes)
+                job.nodes, new, self._data_bytes(job))
             self._pause(job, resize_s + 5.0)   # restore overhead
             job.nodes = new
             job.record_nodes(self.now)
@@ -514,10 +663,9 @@ class ClusterSimulator:
             return
         self._advance(job)
         if self.cluster.swap_straggler(job_id):
-            app = self._app(job)
             migrate_s = self.config.cost.resize_time(
                 job.nodes, max(job.nodes // 2, 1),
-                app.data_bytes // max(job.nodes, 1))
+                self._data_bytes(job) // max(job.nodes, 1))
             self._pause(job, migrate_s)
             self.actions.append(ActionRecord(
                 self.now, job_id, "straggler_migrate", 0.0, migrate_s,

@@ -11,9 +11,16 @@ Artifact schema (``SCHEMA_ID``/``SCHEMA_VERSION``): a JSON object
 
 .. code-block:: json
 
-    {"schema": "repro.rms.sweep", "version": 1,
-     "grid": {"traces": [...], "policies": [...], "mixes": [[r,m,f], ...]},
+    {"schema": "repro.rms.sweep", "version": 2,
+     "grid": {"traces": [...], "policies": [...],
+              "mixes": [[r,m,f,e], ...]},
      "results": [{"trace": ..., "policy": ..., "rigid": ..., ...}]}
+
+Schema v2 (this version) widens malleability mixes to four fractions —
+``(rigid, moldable, malleable, evolving)`` — and adds the ``evolving``
+and ``phase_changes`` row columns.  v1 artifacts load transparently:
+:func:`load_artifact` upgrades them in place (``evolving=0.0``,
+``phase_changes=0``).
 
 ``results`` rows carry only deterministic fields (no wall-clock times),
 floats rounded to :data:`ROUND_DIGITS` decimals, rows sorted by
@@ -38,19 +45,33 @@ import os
 from typing import Dict, List, Optional, Sequence, Tuple
 
 SCHEMA_ID = "repro.rms.sweep"
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 ROUND_DIGITS = 6
 
 #: Fixed CSV column order — the row schema, version ``SCHEMA_VERSION``.
-COLUMNS = ("trace", "policy", "rigid", "moldable", "malleable", "flexible",
-           "scheduling", "num_nodes", "seed", "time_scale", "jobs",
-           "completed", "makespan_s", "util_avg_pct", "util_std_pct",
+COLUMNS = ("trace", "policy", "rigid", "moldable", "malleable", "evolving",
+           "flexible", "scheduling", "num_nodes", "seed", "time_scale",
+           "jobs", "completed", "makespan_s", "util_avg_pct", "util_std_pct",
            "avg_wait_s", "avg_exec_s", "avg_completion_s", "expands",
-           "shrinks", "preempts", "requeues", "timeouts")
+           "shrinks", "preempts", "requeues", "timeouts", "phase_changes")
 
-#: Default smoke grid (2 policies × 2 mixes) — also the golden-artifact grid.
+#: Default smoke grid (2 policies × 3 mixes) — also the golden-artifact grid.
 SMOKE_POLICIES = ("easy", "sjf")
-SMOKE_MIXES = ((0.0, 0.0, 1.0), (0.5, 0.25, 0.25))
+SMOKE_MIXES = ((0.0, 0.0, 1.0, 0.0), (0.5, 0.25, 0.25, 0.0),
+               (0.25, 0.15, 0.3, 0.3))
+
+Mix = Tuple[float, float, float, float]
+
+
+def norm_mix(mix: Sequence[float]) -> Mix:
+    """Normalize a 3- or 4-tuple mix to ``(rigid, moldable, malleable,
+    evolving)`` — 3-tuples are pre-v2 and carry no evolving share."""
+    vals = tuple(float(x) for x in mix)
+    if len(vals) == 3:
+        return vals + (0.0,)
+    if len(vals) != 4:
+        raise ValueError(f"mix needs 3 or 4 fractions, got {mix!r}")
+    return vals
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,7 +83,7 @@ class SweepPoint:
     """
     trace: str
     policy: str
-    mix: Tuple[float, float, float]      # (rigid, moldable, malleable)
+    mix: Tuple[float, ...]     # (rigid, moldable, malleable[, evolving])
     flexible: bool = True
     num_nodes: int = 64
     seed: int = 7
@@ -76,11 +97,12 @@ class SweepPoint:
 
 
 def build_grid(traces: Sequence[str], policies: Sequence[str],
-               mixes: Sequence[Tuple[float, float, float]],
+               mixes: Sequence[Sequence[float]],
                flexibles: Sequence[bool] = (True,),
                **fixed) -> List[SweepPoint]:
     """Cross product of the axes; ``fixed`` forwards SweepPoint fields."""
-    return [SweepPoint(trace=t, policy=p, mix=tuple(m), flexible=f, **fixed)
+    return [SweepPoint(trace=t, policy=p, mix=norm_mix(m), flexible=f,
+                       **fixed)
             for t in traces for p in policies for m in mixes
             for f in flexibles]
 
@@ -91,7 +113,7 @@ def build_grid(traces: Sequence[str], policies: Sequence[str],
 
 def _action_counts(actions) -> Dict[str, int]:
     out = {"expands": 0, "shrinks": 0, "preempts": 0, "requeues": 0,
-           "timeouts": 0}
+           "timeouts": 0, "phase_changes": 0}
     for a in actions:
         if a.timed_out:
             out["timeouts"] += 1
@@ -103,17 +125,20 @@ def _action_counts(actions) -> Dict[str, int]:
             out["preempts"] += 1
         elif a.action == "preempt_requeue":
             out["requeues"] += 1
+        elif a.action == "phase_change":
+            out["phase_changes"] += 1
     return out
 
 
 def report_row(report, *, trace: str, policy: str,
-               mix: Tuple[float, float, float], flexible: bool,
+               mix: Sequence[float], flexible: bool,
                scheduling: str = "sync", seed: int = 7,
                time_scale: float = 1.0) -> Dict[str, object]:
     """Serialize a :class:`~repro.rms.simulator.SimReport` into the shared
     row schema — deterministic fields only, floats rounded."""
     from repro.rms.job import JobState
 
+    mix = norm_mix(mix)
     util_avg, util_std = report.utilization()
     wait, exec_, comp = report.averages()
     completed = sum(1 for j in report.jobs
@@ -123,6 +148,7 @@ def report_row(report, *, trace: str, policy: str,
         "rigid": round(mix[0], ROUND_DIGITS),
         "moldable": round(mix[1], ROUND_DIGITS),
         "malleable": round(mix[2], ROUND_DIGITS),
+        "evolving": round(mix[3], ROUND_DIGITS),
         "flexible": bool(flexible), "scheduling": scheduling,
         "num_nodes": report.config.num_nodes, "seed": seed,
         "time_scale": round(time_scale, ROUND_DIGITS),
@@ -144,8 +170,9 @@ def run_point(point: SweepPoint) -> Dict[str, object]:
     from repro.rms.scheduler import SchedulerConfig
     from repro.workload.swf import MalleabilityMix, jobs_from_swf, parse_swf
 
-    mix = MalleabilityMix(rigid=point.mix[0], moldable=point.mix[1],
-                          malleable=point.mix[2])
+    m = norm_mix(point.mix)
+    mix = MalleabilityMix(rigid=m[0], moldable=m[1], malleable=m[2],
+                          evolving=m[3])
     trace = parse_swf(point.trace)
     jobs, apps = jobs_from_swf(trace, num_nodes=point.num_nodes, mix=mix,
                                seed=point.seed, max_jobs=point.max_jobs,
@@ -168,7 +195,8 @@ def row_key(row: Dict[str, object]) -> Tuple:
     """Canonical sort key: artifact row order is independent of worker
     completion order."""
     return (row["trace"], row["policy"], row["rigid"], row["moldable"],
-            row["malleable"], not row["flexible"], row["scheduling"],
+            row["malleable"], row.get("evolving", 0.0),
+            not row["flexible"], row["scheduling"],
             row["num_nodes"], row["seed"], row["time_scale"])
 
 
@@ -202,13 +230,29 @@ def write_artifact(path: str, doc: Dict[str, object]) -> None:
         fh.write(dumps_artifact(doc))
 
 
+def _upgrade_v1(doc: Dict[str, object]) -> Dict[str, object]:
+    """In-place v1 → v2: pre-evolving artifacts carry a zero evolving
+    fraction and no phase changes."""
+    for row in doc.get("results", []):
+        row.setdefault("evolving", 0.0)
+        row.setdefault("phase_changes", 0)
+    grid = doc.get("grid") or {}
+    if "mixes" in grid:
+        grid["mixes"] = [list(norm_mix(m)) for m in grid["mixes"]]
+    doc["version"] = SCHEMA_VERSION
+    return doc
+
+
 def load_artifact(path: str) -> Dict[str, object]:
     with open(path) as fh:
         doc = json.load(fh)
     if doc.get("schema") != SCHEMA_ID:
         raise ValueError(f"not a sweep artifact: schema={doc.get('schema')!r}")
-    if doc.get("version") != SCHEMA_VERSION:
-        raise ValueError(f"sweep artifact version {doc.get('version')} != "
+    version = doc.get("version")
+    if version == 1:
+        return _upgrade_v1(doc)
+    if version != SCHEMA_VERSION:
+        raise ValueError(f"sweep artifact version {version} != "
                          f"supported {SCHEMA_VERSION}")
     return doc
 
@@ -227,11 +271,12 @@ def write_csv(path: str, rows: Sequence[Dict[str, object]]) -> None:
 
 def winners_by_mix(rows: Sequence[Dict[str, object]],
                    metric: str = "makespan_s") -> Dict[Tuple, str]:
-    """Per (rigid, moldable, malleable) mix: the policy minimizing ``metric``
-    (ties broken by policy name for determinism)."""
+    """Per (rigid, moldable, malleable, evolving) mix: the policy minimizing
+    ``metric`` (ties broken by policy name for determinism)."""
     best: Dict[Tuple, Tuple[float, str]] = {}
     for row in rows:
-        mix = (row["rigid"], row["moldable"], row["malleable"])
+        mix = (row["rigid"], row["moldable"], row["malleable"],
+               row.get("evolving", 0.0))
         cand = (float(row[metric]), str(row["policy"]))
         if mix not in best or cand < best[mix]:
             best[mix] = cand
@@ -256,15 +301,16 @@ def smoke_grid(trace: str, *, num_nodes: int = 64, seed: int = 7
     return points, grid
 
 
-def parse_mixes(spec: str) -> List[Tuple[float, float, float]]:
-    """``"0:0:1,0.5:0.25:0.25"`` -> [(0,0,1), (0.5,0.25,0.25)]."""
+def parse_mixes(spec: str) -> List[Mix]:
+    """``"0:0:1,0.2:0.1:0.4:0.3"`` -> 4-tuples; 3-field specs are pre-v2
+    and get a zero evolving share."""
     mixes = []
     for part in spec.split(","):
         vals = tuple(float(x) for x in part.strip().split(":"))
-        if len(vals) != 3:
-            raise ValueError(f"mix needs rigid:moldable:malleable, got "
-                             f"{part!r}")
-        mixes.append(vals)
+        if len(vals) not in (3, 4):
+            raise ValueError(f"mix needs rigid:moldable:malleable[:evolving],"
+                             f" got {part!r}")
+        mixes.append(norm_mix(vals))
     return mixes
 
 

@@ -1,10 +1,12 @@
 """Workload generation (Feitelson model, Poisson arrivals, SWF replay)."""
-from repro.workload.feitelson import (feitelson_sizes, make_workload,
-                                      poisson_arrivals)
-from repro.workload.swf import (MALLEABLE, MOLDABLE, RIGID, MalleabilityMix,
-                                SWFJob, SWFTrace, annotate_malleability,
+from repro.workload.feitelson import (evolving_phases_for, feitelson_sizes,
+                                      make_workload, poisson_arrivals)
+from repro.workload.swf import (EVOLVING, MALLEABLE, MOLDABLE, RIGID,
+                                MalleabilityMix, SWFJob, SWFTrace,
+                                annotate_malleability, clamp_band,
                                 jobs_from_swf, parse_swf)
 
-__all__ = ["feitelson_sizes", "make_workload", "poisson_arrivals",
-           "SWFJob", "SWFTrace", "MalleabilityMix", "annotate_malleability",
-           "jobs_from_swf", "parse_swf", "RIGID", "MOLDABLE", "MALLEABLE"]
+__all__ = ["evolving_phases_for", "feitelson_sizes", "make_workload",
+           "poisson_arrivals", "SWFJob", "SWFTrace", "MalleabilityMix",
+           "annotate_malleability", "clamp_band", "jobs_from_swf",
+           "parse_swf", "RIGID", "MOLDABLE", "MALLEABLE", "EVOLVING"]

@@ -13,15 +13,23 @@ This module provides:
 - :func:`parse_swf` — tolerant line parser returning :class:`SWFJob`
   records (malformed/truncated lines are skipped and counted, or raised in
   ``strict`` mode).
-- :func:`annotate_malleability` — deterministic rigid/moldable/malleable
-  assignment from a :class:`MalleabilityMix`.
+- :func:`annotate_malleability` — deterministic
+  rigid/moldable/malleable/evolving assignment from a
+  :class:`MalleabilityMix`.
 - :func:`jobs_from_swf` — trace → (:class:`repro.rms.job.Job` list,
   per-job ``AppModel`` dict) adapter; each trace job becomes an
   Amdahl-model app calibrated so that running at the recorded size takes
   the recorded runtime.  The SWF ``user_id`` is threaded onto
   ``Job.user`` (fair-share scheduling); moldable-annotated jobs get a
   factor-of-two size band around the recorded size so the moldable
-  start-size optimizer has real freedom.
+  start-size optimizer has real freedom; evolving-annotated jobs get a
+  deterministic per-phase demand schedule (§2 EVOLVING) whose bands,
+  serial fractions, and data sizes cycle around the recorded size.
+
+All size bands pass through :func:`clamp_band`, which pins the invariant
+``1 <= min_nodes <= preferred <= max_nodes <= cluster`` — without it a
+recorded size far above the simulated cluster (or an aggressive phase
+band) could invert the band and wedge the scheduler.
 """
 from __future__ import annotations
 
@@ -31,7 +39,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.rms.costmodel import AppModel
-from repro.rms.job import Job
+from repro.rms.job import Job, JobPhase, clamp_band
 
 #: SWF field indices (0-based), per the Parallel Workloads Archive spec.
 _FIELDS = ("job_id", "submit_time", "wait_time", "run_time",
@@ -40,7 +48,8 @@ _FIELDS = ("job_id", "submit_time", "wait_time", "run_time",
            "status", "user_id", "group_id", "executable", "queue",
            "partition", "preceding_job", "think_time")
 
-RIGID, MOLDABLE, MALLEABLE = "rigid", "moldable", "malleable"
+RIGID, MOLDABLE, MALLEABLE, EVOLVING = ("rigid", "moldable", "malleable",
+                                        "evolving")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,20 +164,22 @@ def parse_swf(source: Union[str, Iterable[str]], *,
 
 @dataclasses.dataclass(frozen=True)
 class MalleabilityMix:
-    """Fractions of the trace annotated rigid / moldable / malleable."""
+    """Fractions annotated rigid / moldable / malleable / evolving."""
     rigid: float = 0.0
     moldable: float = 0.0
     malleable: float = 1.0
+    evolving: float = 0.0
 
     def __post_init__(self):
-        total = self.rigid + self.moldable + self.malleable
+        total = self.rigid + self.moldable + self.malleable + self.evolving
         if abs(total - 1.0) > 1e-9:
             raise ValueError(f"fractions must sum to 1, got {total}")
-        if min(self.rigid, self.moldable, self.malleable) < 0:
+        if min(self.rigid, self.moldable, self.malleable,
+               self.evolving) < 0:
             raise ValueError("fractions must be non-negative")
 
-    def as_tuple(self) -> Tuple[float, float, float]:
-        return (self.rigid, self.moldable, self.malleable)
+    def as_tuple(self) -> Tuple[float, float, float, float]:
+        return (self.rigid, self.moldable, self.malleable, self.evolving)
 
 
 def annotate_malleability(jobs: Sequence[SWFJob],
@@ -178,14 +189,16 @@ def annotate_malleability(jobs: Sequence[SWFJob],
 
     Uses a seeded permutation + exact quota split (not per-job coin flips)
     so the realised fractions match the requested ones to within one job.
+    The quota layout keeps rigid/moldable slots where they were before the
+    evolving class existed, so 3-way mixes reproduce their historic
+    assignment exactly.
     """
     n = len(jobs)
-    n_rigid = int(round(mix.rigid * n))
-    n_mold = int(round(mix.moldable * n))
-    n_rigid = min(n_rigid, n)
-    n_mold = min(n_mold, n - n_rigid)
-    kinds = ([RIGID] * n_rigid + [MOLDABLE] * n_mold
-             + [MALLEABLE] * (n - n_rigid - n_mold))
+    n_rigid = min(int(round(mix.rigid * n)), n)
+    n_mold = min(int(round(mix.moldable * n)), n - n_rigid)
+    n_evol = min(int(round(mix.evolving * n)), n - n_rigid - n_mold)
+    kinds = ([RIGID] * n_rigid + [MOLDABLE] * n_mold + [EVOLVING] * n_evol
+             + [MALLEABLE] * (n - n_rigid - n_mold - n_evol))
     rng = np.random.default_rng(seed)
     perm = rng.permutation(n)
     out = [""] * n
@@ -205,42 +218,80 @@ def _pow2_at_most(n: int) -> int:
     return p
 
 
+def _evolving_phases(rec: SWFJob, iterations: int, base: int, cap: int,
+                     serial_frac: float, data_bytes_per_node: int
+                     ) -> Tuple[JobPhase, ...]:
+    """Deterministic phase schedule for an EVOLVING trace job.
+
+    2–4 phases (``2 + job_id % 3``) split the work evenly; the demanded
+    preferred size cycles base → up → down around the recorded size, with
+    per-phase serial fractions and data sizes moving in step so both the
+    execution rate and the reconfiguration cost track the phase.  Pure
+    arithmetic on the record — no RNG — so the schedule is reproducible
+    from the trace alone.
+    """
+    n_phases = 2 + rec.job_id % 3
+    prefs = (base, min(base * 2, cap), max(base // 2, 1), min(base * 4, cap))
+    fracs = (serial_frac, serial_frac * 0.5, min(serial_frac * 2.0, 0.5),
+             serial_frac)
+    phases = []
+    for p in range(n_phases):
+        pref = prefs[p % len(prefs)]
+        lo, hi, pref = clamp_band(max(pref // 2, 1), pref * 2, pref, cap)
+        phases.append(JobPhase(
+            work=iterations / n_phases, min_nodes=lo, max_nodes=hi,
+            preferred=pref, serial_frac=fracs[p % len(fracs)],
+            data_bytes=data_bytes_per_node * pref))
+    return tuple(phases)
+
+
 def _trace_app(rec: SWFJob, kind: str, num_nodes: int,
                serial_frac: float, data_bytes_per_node: int) -> AppModel:
     """Amdahl model calibrated so exec at the recorded size = run_time.
 
     Work is measured in seconds-at-recorded-size: ``iterations =
     run_time`` with ``iter_time(recorded) = 1``.  Malleable jobs may move
-    a factor-of-2 around the recorded size; rigid/moldable stay put.
+    a factor-of-2 around the recorded size; rigid/moldable stay put;
+    evolving jobs carry a per-phase demand schedule.
     """
     size = min(rec.procs, num_nodes)
+    cap = _pow2_at_most(num_nodes)
+    phases: Tuple[JobPhase, ...] = ()
+    iterations = max(int(round(rec.run_time)), 1)
     if kind == MALLEABLE:
         base = _pow2_at_most(size)
-        min_nodes = max(base // 4, 1)
-        max_nodes = min(base * 2, _pow2_at_most(num_nodes))
-        preferred = base
+        min_nodes, max_nodes, preferred = clamp_band(
+            max(base // 4, 1), base * 2, base, cap)
         period = 15.0
     elif kind == MOLDABLE:
         # Startable at any power-of-two in a factor-of-two band around the
         # recorded size (the "moldable" start-size optimizer exploits this),
         # but never reconfigured after launch.
         base = _pow2_at_most(size)
-        min_nodes = max(base // 4, 1)
-        max_nodes = min(base * 2, _pow2_at_most(num_nodes))
-        preferred = base
+        min_nodes, max_nodes, preferred = clamp_band(
+            max(base // 4, 1), base * 2, base, cap)
         period = 0.0
+    elif kind == EVOLVING:
+        base = _pow2_at_most(size)
+        phases = _evolving_phases(rec, iterations, base, cap, serial_frac,
+                                  data_bytes_per_node)
+        # envelope band on the app; the live per-phase band lives on Job
+        min_nodes = min(ph.min_nodes for ph in phases)
+        max_nodes = max(ph.max_nodes for ph in phases)
+        preferred = phases[0].preferred
+        period = 15.0
     else:
         base = size
-        min_nodes = max_nodes = preferred = size
+        min_nodes, max_nodes, preferred = clamp_band(size, size, size,
+                                                     num_nodes)
         period = 0.0
-    iterations = max(int(round(rec.run_time)), 1)
     t_at_base = rec.run_time / iterations
     t1 = t_at_base / (serial_frac + (1.0 - serial_frac) / max(base, 1))
     return AppModel(
         name=f"swf:{rec.job_id}", iterations=iterations, t1_iter_s=t1,
         serial_frac=serial_frac, data_bytes=data_bytes_per_node * base,
         min_nodes=min_nodes, max_nodes=max_nodes, preferred=preferred,
-        check_period_s=period)
+        check_period_s=period, phases=phases)
 
 
 def jobs_from_swf(trace: Union[SWFTrace, Sequence[SWFJob]], *,
@@ -256,9 +307,10 @@ def jobs_from_swf(trace: Union[SWFTrace, Sequence[SWFJob]], *,
 
     ``time_scale`` compresses submit/run times (e.g. 0.1 replays a day-long
     trace in a tenth of simulated time, preserving relative load);
-    ``mix`` controls the rigid/moldable/malleable annotation; the recorded
-    size is clamped to ``num_nodes``.  Returns ``(jobs, apps)`` ready for
-    ``ClusterSimulator(jobs, SimConfig(num_nodes=...), apps=apps)``.
+    ``mix`` controls the rigid/moldable/malleable/evolving annotation; the
+    recorded size is clamped to ``num_nodes``.  Returns ``(jobs, apps)``
+    ready for ``ClusterSimulator(jobs, SimConfig(num_nodes=...),
+    apps=apps)``.
     """
     records = list(trace.jobs if isinstance(trace, SWFTrace) else trace)
     if max_jobs is not None:
@@ -274,15 +326,23 @@ def jobs_from_swf(trace: Union[SWFTrace, Sequence[SWFJob]], *,
         app = _trace_app(scaled, kind, num_nodes, serial_frac,
                          data_bytes_per_node)
         apps[app.name] = app
-        start_nodes = (app.preferred if kind in (MALLEABLE, MOLDABLE)
+        start_nodes = (app.preferred if kind in (MALLEABLE, MOLDABLE,
+                                                 EVOLVING)
                        else app.max_nodes)
+        # An evolving job's *live* band starts at phase 0 (the app model
+        # keeps the envelope); the PhaseChange handler rewrites it per phase.
+        if kind == EVOLVING:
+            ph0 = app.phases[0]
+            band = (ph0.min_nodes, ph0.max_nodes, ph0.preferred)
+        else:
+            band = (app.min_nodes, app.max_nodes, app.preferred)
         jobs.append(Job(
             job_id=i, app=app.name, submit_time=float(scaled.submit_time),
             work=float(app.iterations),
-            min_nodes=app.min_nodes, max_nodes=app.max_nodes,
-            preferred=app.preferred, factor=2,
-            malleable=(kind == MALLEABLE),
+            min_nodes=band[0], max_nodes=band[1],
+            preferred=band[2], factor=2,
+            malleable=(kind in (MALLEABLE, EVOLVING)),
             check_period_s=app.check_period_s,
             requested_nodes=start_nodes, data_bytes=app.data_bytes,
-            user=max(int(rec.user_id), 0)))
+            user=max(int(rec.user_id), 0), phases=app.phases))
     return jobs, apps

@@ -18,6 +18,25 @@ N_JOBS = 200
 SEED = 1234
 MAX_NODES = 64
 
+#: Canonical evolving-heavy mix (rigid, moldable, malleable, evolving) used
+#: by the evolving-job tests and the CI smoke grid.
+EVOLVING_MIX = (0.2, 0.1, 0.4, 0.3)
+
+
+def evolving_corpus_jobs(n_jobs: int = 60, *, seed: int = 7,
+                         num_nodes: int = MAX_NODES,
+                         time_scale: float = 0.2):
+    """A deterministic evolving-heavy slice of the corpus, ready for
+    ``ClusterSimulator``: returns ``(jobs, apps)`` with :data:`EVOLVING_MIX`
+    annotation so tests exercise phase schedules over real queueing depth."""
+    from repro.workload import MalleabilityMix, jobs_from_swf, parse_swf
+
+    lines, _ = synthetic_swf()
+    trace = parse_swf(lines)
+    mix = MalleabilityMix(*EVOLVING_MIX)
+    return jobs_from_swf(trace, num_nodes=num_nodes, mix=mix, seed=seed,
+                         max_jobs=n_jobs, time_scale=time_scale)
+
 
 def synthetic_swf(n_jobs: int = N_JOBS, *, seed: int = SEED,
                   max_nodes: int = MAX_NODES

@@ -1,0 +1,359 @@
+"""EVOLVING jobs (§2 taxonomy): PhaseChange events + phase-aware DMR.
+
+Covers the ISSUE-3 tentpole and its satellite bugfixes:
+
+- deterministic phase schedules from the SWF adapter,
+- live band updates visible to the scheduler/DMR check after a
+  ``PhaseChange``,
+- epoch invalidation of phase predictions across requeues,
+- the size-band clamp (``min <= preferred <= max <= cluster``) for trace
+  jobs whose recorded size dwarfs the simulated cluster,
+- structural invalidation of pending ``ExpandTimeout`` chains on requeue
+  (regression: a requeued job's stale resizer-job wait used to survive
+  until the next scheduler pass, so the stale timeout could fire and
+  record a spurious timed-out action against a job at 0 nodes).
+"""
+import os
+
+import pytest
+
+from repro.rms import (AppModel, ClusterSimulator, Job, JobPhase, JobState,
+                       JobSubmit, PhaseChange, SchedulerConfig, SimConfig)
+from repro.workload import (EVOLVING, MalleabilityMix, clamp_band,
+                            jobs_from_swf, make_workload, parse_swf)
+from synthetic_swf import EVOLVING_MIX, evolving_corpus_jobs
+
+DATA = os.path.join(os.path.dirname(__file__), "data", "sample.swf")
+
+
+# ---------------------------------------------------------------------------
+# Phase schedules from workload generation
+# ---------------------------------------------------------------------------
+
+def evolving_mix():
+    return MalleabilityMix(*EVOLVING_MIX)
+
+
+def test_phase_schedules_deterministic():
+    trace = parse_swf(DATA)
+    a, apps_a = jobs_from_swf(trace, num_nodes=64, mix=evolving_mix(),
+                              seed=7)
+    b, apps_b = jobs_from_swf(trace, num_nodes=64, mix=evolving_mix(),
+                              seed=7)
+    assert any(j.phases for j in a)
+    for ja, jb in zip(a, b):
+        assert ja.phases == jb.phases
+        assert apps_a[ja.app].phases == apps_b[jb.app].phases
+
+
+def test_evolving_jobs_get_consistent_phases():
+    trace = parse_swf(DATA)
+    jobs, apps = jobs_from_swf(trace, num_nodes=64, mix=evolving_mix(),
+                               seed=7)
+    evolving = [j for j in jobs if j.phases]
+    n = len(jobs)
+    assert abs(len(evolving) - EVOLVING_MIX[3] * n) <= 1
+    for j in evolving:
+        app = apps[j.app]
+        assert j.malleable
+        assert j.phases == app.phases
+        assert 2 <= len(j.phases) <= 4
+        # phase works sum to the job's total work
+        assert sum(ph.work for ph in j.phases) == pytest.approx(j.work)
+        for ph in j.phases:
+            assert 1 <= ph.min_nodes <= ph.preferred <= ph.max_nodes <= 64
+        # the live band starts at phase 0; the app holds the envelope
+        ph0 = j.phases[0]
+        assert (j.min_nodes, j.max_nodes, j.preferred) == \
+            (ph0.min_nodes, ph0.max_nodes, ph0.preferred)
+        assert app.min_nodes == min(ph.min_nodes for ph in j.phases)
+        assert app.max_nodes == max(ph.max_nodes for ph in j.phases)
+
+
+def test_make_workload_evolving_fraction():
+    jobs = make_workload(40, seed=7, evolving_fraction=0.5)
+    evolving = [j for j in jobs if j.phases]
+    assert 5 < len(evolving) < 35          # ~50% by coin flip
+    for j in evolving:
+        assert j.malleable
+        assert sum(ph.work for ph in j.phases) == pytest.approx(j.work)
+    # the historic draws are untouched: fraction 0 reproduces the old
+    # workload bit-for-bit
+    base = make_workload(40, seed=7)
+    again = make_workload(40, seed=7, evolving_fraction=0.0)
+    assert [(j.submit_time, j.app, j.user) for j in base] == \
+        [(j.submit_time, j.app, j.user) for j in again]
+
+
+# ---------------------------------------------------------------------------
+# PhaseChange handler: live band + forced DMR check
+# ---------------------------------------------------------------------------
+
+def two_phase_job(*, work=200.0, p0=(4, 4, 4), p1=(1, 2, 2)):
+    phases = (JobPhase(work=work / 2, min_nodes=p0[0], max_nodes=p0[1],
+                       preferred=p0[2], serial_frac=0.0),
+              JobPhase(work=work / 2, min_nodes=p1[0], max_nodes=p1[1],
+                       preferred=p1[2], serial_frac=0.0))
+    app = AppModel("evo", iterations=int(work), t1_iter_s=4.0,
+                   serial_frac=0.0, data_bytes=1 << 20, min_nodes=1,
+                   max_nodes=4, preferred=None, check_period_s=5.0,
+                   phases=phases)
+    job = Job(job_id=0, app="evo", submit_time=0.0, work=work,
+              min_nodes=p0[0], max_nodes=p0[1], preferred=p0[2], factor=2,
+              malleable=True, check_period_s=5.0, requested_nodes=p0[2],
+              data_bytes=1 << 20, phases=phases)
+    return job, {"evo": app}
+
+
+def test_phase_change_updates_live_band_and_forces_shrink():
+    """Entering a phase whose max is below the current allocation must
+    update the live band and trigger an immediate DMR shrink (§4.1
+    requested-shrink semantics), not wait for the next periodic check."""
+    job, apps = two_phase_job()
+    sim = ClusterSimulator([job], SimConfig(num_nodes=8, flexible=True,
+                                            checkpoint_period_s=0.0),
+                           apps=apps)
+    rep = sim.run()
+    assert job.state is JobState.COMPLETED
+    pcs = [a for a in rep.actions if a.action == "phase_change"]
+    assert len(pcs) == 1                       # one boundary, applied once
+    t_pc = pcs[0].t
+    # live band rewritten to phase 1
+    assert (job.min_nodes, job.max_nodes, job.preferred) == (1, 2, 2)
+    assert job.requested_nodes <= 2            # requeue restart stays in band
+    # the forced check shrank the job out of the out-of-band size 4
+    shrinks = [a for a in rep.actions
+               if a.action == "shrink" and a.t >= t_pc]
+    assert shrinks and shrinks[0].t == pytest.approx(t_pc)
+    assert shrinks[0].from_nodes == 4 and shrinks[0].to_nodes == 2
+    assert shrinks[0].reason == "requested-shrink"
+
+
+def test_phase_change_expand_demand_met_when_free():
+    """A phase that raises the demand floor above the current size expands
+    at the forced check when nodes are free."""
+    job, apps = two_phase_job(p0=(2, 2, 2), p1=(4, 8, 8))
+    sim = ClusterSimulator([job], SimConfig(num_nodes=8, flexible=True,
+                                            checkpoint_period_s=0.0),
+                           apps=apps)
+    rep = sim.run()
+    assert job.state is JobState.COMPLETED
+    t_pc = next(a.t for a in rep.actions if a.action == "phase_change")
+    expands = [a for a in rep.actions
+               if a.action == "expand" and not a.timed_out and a.t >= t_pc]
+    assert expands and expands[0].from_nodes == 2
+    assert expands[0].to_nodes == 4            # one factor step toward min
+    assert expands[0].reason == "requested-expand"
+
+
+def test_phase_band_visible_to_scheduler_next_pass():
+    """After a shrinking phase change, the freed nodes start a queued job
+    on the very next pass — the scheduler saw the live band, not the
+    submission-time one."""
+    job, apps = two_phase_job()
+    rigid_app = AppModel("r6", iterations=50, t1_iter_s=6.0,
+                         serial_frac=0.0, data_bytes=0, min_nodes=6,
+                         max_nodes=6, preferred=None, check_period_s=0.0)
+    apps["r6"] = rigid_app
+    queued = Job(job_id=1, app="r6", submit_time=1.0, work=50.0,
+                 min_nodes=6, max_nodes=6, preferred=None, malleable=False,
+                 requested_nodes=6)
+    sim = ClusterSimulator([job, queued],
+                           SimConfig(num_nodes=8, flexible=True,
+                                     checkpoint_period_s=0.0), apps=apps)
+    rep = sim.run()
+    assert all(j.state is JobState.COMPLETED for j in rep.jobs)
+    t_pc = next(a.t for a in rep.actions if a.action == "phase_change")
+    # 8 nodes: evolving job holds 4, queued needs 6 -> blocked until the
+    # phase-1 shrink to 2 frees capacity at the forced check
+    assert queued.start_time >= t_pc
+    assert queued.start_time == pytest.approx(t_pc, abs=1.0)
+
+
+def test_phase_epoch_invalidated_after_requeue():
+    """A requeue mid-phase kills the in-flight PhaseChange prediction; the
+    restart re-predicts from preserved progress, and each boundary is still
+    applied exactly once."""
+    job, apps = two_phase_job()
+    # fail one of the job's nodes early: survivors 3 >= min 4 is false ->
+    # requeue + checkpoint restart
+    cfg = SimConfig(num_nodes=8, flexible=True, checkpoint_period_s=0.0,
+                    failures=((20.0, 0),))
+    sim = ClusterSimulator([job], cfg, apps=apps)
+    fired = []
+    sim.engine.on(PhaseChange, lambda ev: fired.append(
+        (ev.t, ev.epoch, ev.phase)))
+    rep = sim.run()
+    assert any(a.action in ("failure_requeue", "failure_shrink")
+               for a in rep.actions)
+    assert job.state is JobState.COMPLETED
+    applied = [a for a in rep.actions if a.action == "phase_change"]
+    assert len(applied) == 1                   # boundary applied exactly once
+    # stale predictions (scheduled pre-requeue) fired but died at the
+    # epoch guard: every *applied* event's epoch was live at dispatch
+    assert len(fired) >= 1
+    assert job.phase_index == 1
+
+
+def test_phase_change_not_applied_before_boundary_reached():
+    """A straggler slows the job after the PhaseChange prediction is made
+    (StragglerOnset reschedules nothing); the stale event must re-predict
+    instead of entering the phase with phase-0 work remaining."""
+    job, apps = two_phase_job(p0=(4, 4, 4), p1=(1, 2, 2))
+    # 4-node cluster: the job owns every node, so the straggler cannot be
+    # swapped out and the 1/3 rate persists
+    cfg = SimConfig(num_nodes=4, flexible=True, checkpoint_period_s=0.0,
+                    stragglers=((50.0, 0, 3.0),))
+    sim = ClusterSimulator([job], cfg, apps=apps)
+    rep = sim.run()
+    assert job.state is JobState.COMPLETED
+    pcs = [a for a in rep.actions if a.action == "phase_change"]
+    assert len(pcs) == 1
+    # unslowed prediction lands ~t=101; the real boundary (49 work done by
+    # t=50, then 51 more at 1/3 rate) is ~t=203
+    assert pcs[0].t > 150.0
+
+
+def test_requeue_checkpoint_rewind_resyncs_phase():
+    """A checkpoint restore that rewinds work into an earlier phase must
+    also rewind the live phase, and the skipped transition re-fires as the
+    replayed work crosses the boundary again.
+
+    The bands are identical so the phase change triggers no resize — a
+    resize would refresh the restore point and defeat the rewind; the
+    phases differ in serial fraction only (rate changes per phase).
+    """
+    phases = (JobPhase(work=100.0, min_nodes=4, max_nodes=4, preferred=4,
+                       serial_frac=0.0),
+              JobPhase(work=100.0, min_nodes=4, max_nodes=4, preferred=4,
+                       serial_frac=0.5))
+    app = AppModel("evo2", iterations=200, t1_iter_s=4.0, serial_frac=0.0,
+                   data_bytes=1 << 20, min_nodes=4, max_nodes=4,
+                   preferred=None, check_period_s=5.0, phases=phases)
+    job = Job(job_id=0, app="evo2", submit_time=0.0, work=200.0,
+              min_nodes=4, max_nodes=4, preferred=4, factor=2,
+              malleable=True, check_period_s=5.0, requested_nodes=4,
+              data_bytes=1 << 20, phases=phases)
+    # no checkpoint refresh (period 0, no resizes): the restore point stays
+    # at start (work 0); failing one of the job's 4 nodes after the phase-1
+    # boundary leaves 3 survivors < min 4 -> requeue + full rewind
+    cfg = SimConfig(num_nodes=8, flexible=True, checkpoint_period_s=0.0,
+                    failures=((150.0, 0),))
+    sim = ClusterSimulator([job], cfg, apps={"evo2": app})
+    rep = sim.run()
+    requeues = [a for a in rep.actions if a.action == "failure_requeue"]
+    assert requeues, "scenario must exercise the requeue path"
+    t_rq = requeues[0].t
+    pcs = [a for a in rep.actions if a.action == "phase_change"]
+    # boundary crossed once before the failure and again after the rewind
+    assert len(pcs) == 2
+    assert pcs[0].t < t_rq < pcs[1].t
+    assert job.state is JobState.COMPLETED
+    assert job.phase_index == 1
+
+
+# ---------------------------------------------------------------------------
+# Satellite: size-band clamp (min <= preferred <= max <= cluster)
+# ---------------------------------------------------------------------------
+
+def test_clamp_band_pins_invariant():
+    assert clamp_band(64, 32, 48, 32) == (32, 32, 32)   # inverted input
+    assert clamp_band(2, 8, 16, 64) == (2, 8, 8)        # preferred above max
+    assert clamp_band(0, 0, None, 64) == (1, 1, None)   # degenerate
+    lo, hi, pref = clamp_band(1, 512, 256, 48)
+    assert 1 <= lo <= pref <= hi <= 48
+
+
+@pytest.mark.parametrize("num_nodes", [3, 20, 48, 64])
+def test_trace_bands_never_invert_on_small_clusters(num_nodes):
+    """Regression (ISSUE 3 satellite): trace jobs whose recorded size
+    exceeds the simulated cluster (e.g. 256 procs replayed on 48 nodes)
+    must still get a satisfiable band for every annotation kind."""
+    lines = ["; MaxNodes: 512"]
+    for i, procs in enumerate([1, 5, 48, 96, 256, 300, 512], start=1):
+        lines.append(f"{i} {10 * i} 0 600 {procs} -1 -1 {procs} 900 -1 1 "
+                     f"{i} 1 1 1 1 -1 -1")
+    trace = parse_swf(lines)
+    mix = MalleabilityMix(rigid=0.25, moldable=0.25, malleable=0.25,
+                          evolving=0.25)
+    jobs, apps = jobs_from_swf(trace, num_nodes=num_nodes, mix=mix, seed=3)
+    for j in jobs:
+        app = apps[j.app]
+        pref = j.preferred if j.preferred is not None else j.requested_nodes
+        assert 1 <= j.min_nodes <= pref <= j.max_nodes <= num_nodes
+        assert j.min_nodes <= j.requested_nodes <= j.max_nodes
+        assert app.min_nodes <= app.max_nodes <= num_nodes
+        for ph in j.phases:
+            assert 1 <= ph.min_nodes <= ph.preferred <= ph.max_nodes \
+                <= num_nodes
+
+
+# ---------------------------------------------------------------------------
+# Satellite: requeue structurally invalidates pending ExpandTimeouts
+# ---------------------------------------------------------------------------
+
+def test_requeue_invalidates_pending_expand_timeout():
+    """Regression: requeueing a job with a pending resizer-job wait must
+    void the wait *and* its scheduled ExpandTimeout.  Pre-fix, the wait
+    entry survived until the next scheduler pass, so the stale timeout
+    matched it and recorded a spurious timed-out action against a job that
+    holds zero nodes."""
+    apps = {
+        "grow": AppModel("grow", iterations=300, t1_iter_s=2.0,
+                         serial_frac=0.0, data_bytes=1 << 20, min_nodes=2,
+                         max_nodes=8, preferred=8, check_period_s=5.0),
+        "wall": AppModel("wall", iterations=200, t1_iter_s=6.0,
+                         serial_frac=0.0, data_bytes=0, min_nodes=6,
+                         max_nodes=6, preferred=None, check_period_s=0.0),
+    }
+    grower = Job(job_id=0, app="grow", submit_time=0.0, work=300.0,
+                 min_nodes=2, max_nodes=8, preferred=8, malleable=True,
+                 check_period_s=5.0, requested_nodes=2, data_bytes=1 << 20)
+    wall = Job(job_id=1, app="wall", submit_time=8.0, work=200.0,
+               min_nodes=6, max_nodes=6, preferred=None, malleable=False,
+               requested_nodes=6)
+    cfg = SimConfig(num_nodes=8, flexible=True, scheduling="async",
+                    checkpoint_period_s=0.0, expand_timeout_s=40.0)
+    sim = ClusterSimulator([grower, wall], cfg, apps=apps)
+    # drive the engine manually (instead of sim.run()) so the requeue can
+    # land at the pathological moment: wait pending, timeout scheduled
+    for j in sim.jobs:
+        sim.engine.schedule(JobSubmit(j.submit_time, j.job_id))
+    guard = 0
+    while not sim._waiting_expands:
+        assert sim.engine.step(), "never reached a waiting expand"
+        guard += 1
+        assert guard < 10_000
+    t_requeue = sim.now
+    # the preemption path's requeue (what _apply_preemption does for a
+    # victim stuck at its minimum size)
+    sim._requeue(grower, "preempt_requeue", grower.nodes,
+                 "head-reservation-slip")
+    # the resizer-job reservation is dropped immediately, not next pass
+    assert sim.cluster.allocation(-(grower.job_id + 1)) == 0
+    assert not sim._waiting_expands
+    sim.engine.run()
+    # no spurious timeout fired against the requeued (0-node) job
+    spurious = [a for a in sim.actions
+                if a.timed_out and a.t > t_requeue and a.from_nodes == 0]
+    assert spurious == []
+    # and the workload still drains: the grower restarted and finished
+    assert grower.state is JobState.COMPLETED
+    assert wall.state is JobState.COMPLETED
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: evolving corpus drains under every policy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["easy", "malleable", "preempt",
+                                    "moldable", "fairshare"])
+def test_evolving_corpus_replay_completes(policy):
+    jobs, apps = evolving_corpus_jobs(40)
+    rep = ClusterSimulator(
+        jobs, SimConfig(num_nodes=64, flexible=True,
+                        sched=SchedulerConfig(policy=policy)),
+        apps=apps).run()
+    assert all(j.state is JobState.COMPLETED for j in rep.jobs)
+    assert any(a.action == "phase_change" for a in rep.actions)
+    assert max(e[1] for e in rep.timeline) <= 64

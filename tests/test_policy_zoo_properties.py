@@ -231,6 +231,63 @@ def test_fairshare_accrues_usage_in_simulation():
     assert sum(sim.scheduler.policy._usage.values()) > 0
 
 
+def test_fairshare_resize_and_finish_same_pass_billed_exactly():
+    """A job that resizes *and* finishes between two passes is billed from
+    its full nodes_history: 8 nodes for 30 s, then 4 nodes for 20 s."""
+    import pytest
+
+    pol = Scheduler(Cluster(64), SchedulerConfig(policy="fairshare")).policy
+    j = make_job(0, 8, user=1, state=JobState.RUNNING)
+    j.record_nodes(0.0)
+    pol.observe([j], 0.0)
+    j.nodes = 4                      # shrink at t=30 (no pass in between)
+    j.record_nodes(30.0)
+    j.state = JobState.COMPLETED     # finish at t=50, same upcoming pass
+    j.end_time = 50.0
+    j.record_nodes(50.0)
+    pol.observe([], 60.0)
+    assert pol.usage(1) == pytest.approx(8 * 30.0 + 4 * 20.0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_fairshare_billing_exact_under_resizes_and_phase_changes(seed):
+    """Property (ISSUE 3 billing audit): with decay disabled, the total
+    billed fair-share usage equals the exact node-seconds integral of every
+    job's allocation history — under DMR resizes, PhaseChange-forced
+    resizes firing *between* passes, and resize+finish landing in the same
+    pass."""
+    import sys, os
+    import pytest
+    sys.path.insert(0, os.path.dirname(__file__))
+    from synthetic_swf import synthetic_swf
+
+    from repro.rms import ClusterSimulator, SimConfig
+    from repro.workload import MalleabilityMix, jobs_from_swf, parse_swf
+
+    rng = random.Random(seed)
+    lines, _ = synthetic_swf()
+    trace = parse_swf(lines)
+    evolving = rng.choice([0.0, 0.3, 0.6])
+    malleable = rng.choice([0.2, 0.4]) * (1.0 - evolving)
+    rigid = 1.0 - malleable - evolving
+    mix = MalleabilityMix(rigid=rigid, moldable=0.0, malleable=malleable,
+                          evolving=evolving)
+    jobs, apps = jobs_from_swf(trace, num_nodes=32, mix=mix,
+                               seed=rng.randint(0, 99),
+                               max_jobs=rng.randint(15, 30),
+                               time_scale=0.15)
+    cfg = SimConfig(num_nodes=32, flexible=True,
+                    sched=SchedulerConfig(policy="fairshare",
+                                          fairshare_halflife_s=1e15))
+    sim = ClusterSimulator(jobs, cfg, apps=apps)
+    rep = sim.run()
+    assert all(j.state is JobState.COMPLETED for j in rep.jobs)
+    exact = sum(j.node_seconds() for j in rep.jobs)
+    billed = sum(sim.scheduler.policy._usage.values())
+    assert billed == pytest.approx(exact, rel=1e-9)
+
+
 def test_fairshare_boost_still_dominates():
     pol = Scheduler(Cluster(64), SchedulerConfig(policy="fairshare")).policy
     job = make_job(0, 4, user=1)

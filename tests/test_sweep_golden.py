@@ -95,13 +95,47 @@ def test_load_artifact_round_trip_and_rejections(tmp_path):
 
 def test_winners_by_mix_deterministic_tiebreak():
     rows = [
-        {"rigid": 0.0, "moldable": 0.0, "malleable": 1.0, "policy": "b",
-         "makespan_s": 100.0},
-        {"rigid": 0.0, "moldable": 0.0, "malleable": 1.0, "policy": "a",
-         "makespan_s": 100.0},
-        {"rigid": 1.0, "moldable": 0.0, "malleable": 0.0, "policy": "c",
-         "makespan_s": 50.0},
+        {"rigid": 0.0, "moldable": 0.0, "malleable": 1.0, "evolving": 0.0,
+         "policy": "b", "makespan_s": 100.0},
+        {"rigid": 0.0, "moldable": 0.0, "malleable": 1.0, "evolving": 0.0,
+         "policy": "a", "makespan_s": 100.0},
+        {"rigid": 1.0, "moldable": 0.0, "malleable": 0.0, "evolving": 0.0,
+         "policy": "c", "makespan_s": 50.0},
+        # a v1 row (no evolving key) lands in the zero-evolving bucket
+        {"rigid": 1.0, "moldable": 0.0, "malleable": 0.0,
+         "policy": "b", "makespan_s": 40.0},
     ]
     winners = sweep.winners_by_mix(rows)
-    assert winners[(0.0, 0.0, 1.0)] == "a"      # tie -> lexicographic
-    assert winners[(1.0, 0.0, 0.0)] == "c"
+    assert winners[(0.0, 0.0, 1.0, 0.0)] == "a"  # tie -> lexicographic
+    assert winners[(1.0, 0.0, 0.0, 0.0)] == "b"
+
+
+def test_smoke_grid_includes_evolving_mix():
+    """The golden grid must keep exercising the evolving workload class."""
+    points, grid = sweep.smoke_grid(TRACE)
+    assert any(m[3] > 0 for m in grid["mixes"])
+    assert all(len(p.mix) == 4 for p in points)
+    doc = json.loads(golden_bytes())
+    assert any(row["evolving"] > 0 and row["phase_changes"] > 0
+               for row in doc["results"])
+
+
+def test_load_artifact_upgrades_v1(tmp_path):
+    """Pre-evolving (v1) artifacts stay loadable: rows gain evolving=0.0
+    and phase_changes=0, grid mixes widen to 4 fractions."""
+    v1 = {"schema": sweep.SCHEMA_ID, "version": 1,
+          "grid": {"mixes": [[0.0, 0.0, 1.0]]},
+          "results": [{"trace": "t.swf", "policy": "easy", "rigid": 0.0,
+                       "moldable": 0.0, "malleable": 1.0, "flexible": True,
+                       "scheduling": "sync", "num_nodes": 64, "seed": 7,
+                       "time_scale": 1.0, "makespan_s": 10.0}]}
+    path = tmp_path / "v1.json"
+    path.write_text(json.dumps(v1))
+    doc = sweep.load_artifact(str(path))
+    assert doc["version"] == sweep.SCHEMA_VERSION
+    row = doc["results"][0]
+    assert row["evolving"] == 0.0
+    assert row["phase_changes"] == 0
+    assert doc["grid"]["mixes"] == [[0.0, 0.0, 1.0, 0.0]]
+    # upgraded rows sort with the v2 key
+    assert sweep.row_key(row)
