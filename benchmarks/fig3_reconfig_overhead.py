@@ -5,12 +5,19 @@ plus the calibrated Slurm-transaction model.  Right chart (b): data-
 redistribution time from the factor-based transfer plans over per-node
 links.  Reproduces both paper observations: more participants => faster
 resize; shrinks pay extra synchronization.
+
+``--calibration <artifact>`` swaps the hand-wired paper-fit constants for
+the parameters fitted from measured redistribute runs
+(:mod:`repro.calib`), and appends a measured-vs-fitted-vs-paper
+comparison block from the artifact's samples.  Without it the paper-fit
+defaults are used, as before.
 """
 from __future__ import annotations
 
+import argparse
 import time
+from typing import Optional
 
-from repro.core import expand_plan, shrink_plan, transfer_time_s
 from repro.core.actions import Action
 from repro.rms import Cluster, ReconfigPolicy
 from repro.rms.costmodel import GiB, ReconfigCostModel
@@ -19,8 +26,8 @@ from repro.rms.job import Job, JobState
 SIZES = [1, 2, 4, 8, 16, 32]
 
 
-def rows():
-    cost = ReconfigCostModel()
+def rows(cost: Optional[ReconfigCostModel] = None):
+    cost = cost if cost is not None else ReconfigCostModel()
     pol = ReconfigPolicy()
     out = []
     for p in SIZES:
@@ -38,11 +45,11 @@ def rows():
         wall_us = (time.perf_counter() - t0) / 100 * 1e6
         sched_expand = cost.schedule_time(Action.EXPAND, q)
         sched_shrink = cost.schedule_time(Action.SHRINK, q)
-        t_expand = transfer_time_s(expand_plan(p, q, GiB),
-                                   link_bw=cost.link_bw)
-        t_shrink = transfer_time_s(
-            shrink_plan(q, p, GiB), link_bw=cost.link_bw,
-            sync_s_per_participant=cost.shrink_sync_s)
+        # resize_time is what the simulator charges (spawn + busiest-link
+        # drain + shrink sync) — the same quantity the calibration
+        # comparison block and the artifact samples report.
+        t_expand = cost.resize_time(p, q, GiB)
+        t_shrink = cost.resize_time(q, p, GiB)
         out.append({"action": "expand", "from": p, "to": q,
                     "policy_us": round(wall_us, 1),
                     "sched_s": round(sched_expand, 4),
@@ -54,8 +61,14 @@ def rows():
     return out
 
 
-def main(quick: bool = False):
-    rs = rows()
+def main(quick: bool = False, calibration: Optional[str] = None):
+    cost = ReconfigCostModel()
+    if calibration:
+        cost = ReconfigCostModel.from_artifact(calibration)
+        print(f"# using calibration {cost.calibration_id} "
+              f"(link_bw={cost.link_bw:.4g} B/s, spawn_s={cost.spawn_s}, "
+              f"shrink_sync_s={cost.shrink_sync_s})")
+    rs = rows(cost)
     print("# Fig3: reconfiguration scheduling + resize times (FS, 1 GiB)")
     print("action,from,to,policy_us,sched_s,resize_s")
     for r in rs:
@@ -68,8 +81,24 @@ def main(quick: bool = False):
           f"> resize(32->64)={exp[32]}s: {exp[1] > exp[32]}")
     print(f"# claim[shrink sync overhead]: shrink(64->32)={shr[64]}s > "
           f"expand(32->64)={exp[32]}s: {shr[64] > exp[32]}")
+    if calibration:
+        from repro.calib import fit_report_rows, load_calibration
+        doc = load_calibration(calibration)
+        print(f"# measured vs fitted vs paper-fit "
+              f"(backend={doc['backend']}, "
+              f"residual rms={doc['residuals']['resize_rms_s']}s)")
+        print("action,from,to,bytes,measured_s,fitted_s,paper_s")
+        for c in fit_report_rows(doc):
+            print(f"{c['action']},{c['from']},{c['to']},{c['bytes']},"
+                  f"{c['measured_s']},{c['fitted_s']},{c['paper_s']}")
     return rs
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--calibration", default=None,
+                    help="repro.calib artifact (default: paper-fit "
+                         "constants)")
+    args = ap.parse_args()
+    main(quick=args.quick, calibration=args.calibration)

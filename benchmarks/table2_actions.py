@@ -3,21 +3,36 @@
 Wide-optimization mode (no preferred sizes) — the configuration consistent
 with the paper's §7.3/7.4 overhead study (frequent expansions; async
 expand waits dominated by the resizer-job timeout).
+
+``--calibration <artifact>`` replays the workload under a measured
+reconfiguration-cost model (:mod:`repro.calib`) instead of the hand-fit
+Table 2 / Fig. 3 constants; absent, the paper-fit defaults apply.
 """
 from __future__ import annotations
+
+import argparse
+from typing import Optional
 
 import numpy as np
 
 from benchmarks.common import action_stats, run_sim
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, calibration: Optional[str] = None):
     n = 100 if quick else 400
+    sim_kw = {}
+    if calibration:
+        from repro.rms.costmodel import ReconfigCostModel
+        cost = ReconfigCostModel.from_artifact(calibration)
+        sim_kw["cost"] = cost
+        print(f"# using calibration {cost.calibration_id} "
+              f"(link_bw={cost.link_bw:.4g} B/s)")
     print(f"# Table 2: actions in a {n}-job workload (wide-opt mode)")
     print("mode,action,min_s,max_s,avg_s,std_s,quantity,actions_per_job")
     out = {}
     for mode in ("sync", "async"):
-        rep = run_sim(n, flexible=True, scheduling=mode, wide=True)
+        rep = run_sim(n, flexible=True, scheduling=mode, wide=True,
+                      **sim_kw)
         out[mode] = rep
         for kind in ("no_action", "expand", "shrink"):
             s = action_stats(rep.actions, kind)
@@ -37,4 +52,10 @@ def main(quick: bool = False):
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--calibration", default=None,
+                    help="repro.calib artifact (default: paper-fit "
+                         "constants)")
+    args = ap.parse_args()
+    main(quick=args.quick, calibration=args.calibration)

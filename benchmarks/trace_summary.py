@@ -1,0 +1,126 @@
+"""Trace-summary CLI: load factor, inter-arrival stats, size histogram.
+
+First slice of the ROADMAP "Trace corpus" item: before replaying a trace
+(or committing a new one to the corpus), summarize what load it actually
+carries — the malleability literature's conclusions move with exactly
+these statistics.  Works on any SWF file; ``--synthetic`` additionally
+summarizes the deterministic ~200-job generated corpus the tests use
+(``tests/synthetic_swf.py``).
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/trace_summary.py \\
+        tests/data/sample.swf [more.swf ...] [--synthetic] [--nodes 64]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.workload.swf import SWFTrace, parse_swf
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _pow2_bucket(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+def _pct(xs: np.ndarray, q: float) -> float:
+    return float(np.percentile(xs, q)) if len(xs) else 0.0
+
+
+def summarize(trace: SWFTrace, label: str,
+              nodes: Optional[int] = None) -> Dict[str, object]:
+    """Aggregate statistics of one parsed trace."""
+    jobs = trace.jobs
+    submits = np.array(sorted(j.submit_time for j in jobs))
+    runs = np.array([j.run_time for j in jobs], dtype=float)
+    procs = np.array([j.procs for j in jobs], dtype=float)
+    capacity = nodes or trace.max_nodes or int(procs.max(initial=1))
+    # Span: first submission to the last recorded completion.
+    end = max((j.submit_time + max(j.wait_time, 0.0) + j.run_time
+               for j in jobs), default=0.0)
+    span = max(end - (submits[0] if len(submits) else 0.0), 1.0)
+    inter = np.diff(submits)
+    hist: Dict[int, int] = {}
+    for j in jobs:
+        b = _pow2_bucket(j.procs)
+        hist[b] = hist.get(b, 0) + 1
+    return {
+        "trace": label, "jobs": len(jobs),
+        "skipped_lines": trace.skipped_lines,
+        "capacity_nodes": capacity, "span_s": round(span, 1),
+        # Offered load: node-seconds demanded over capacity node-seconds.
+        "load_factor": round(float(np.sum(procs * runs))
+                             / (capacity * span), 4),
+        "interarrival_mean_s": round(float(inter.mean())
+                                     if len(inter) else 0.0, 1),
+        "interarrival_p50_s": round(_pct(inter, 50), 1),
+        "interarrival_p90_s": round(_pct(inter, 90), 1),
+        "runtime_mean_s": round(float(runs.mean()) if len(runs) else 0.0, 1),
+        "runtime_p50_s": round(_pct(runs, 50), 1),
+        "runtime_p90_s": round(_pct(runs, 90), 1),
+        "size_mean": round(float(procs.mean()) if len(procs) else 0.0, 2),
+        "size_hist": hist,
+    }
+
+
+def synthetic_trace() -> SWFTrace:
+    """Parse the deterministic test corpus (tests/synthetic_swf.py)."""
+    tests_dir = os.path.join(_REPO, "tests")
+    if tests_dir not in sys.path:
+        sys.path.insert(0, tests_dir)
+    import synthetic_swf
+    lines, _ = synthetic_swf.synthetic_swf()
+    return parse_swf(lines)
+
+
+COLS = ("trace", "jobs", "skipped_lines", "capacity_nodes", "span_s",
+        "load_factor", "interarrival_mean_s", "interarrival_p50_s",
+        "interarrival_p90_s", "runtime_mean_s", "runtime_p50_s",
+        "runtime_p90_s", "size_mean")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("traces", nargs="*",
+                    default=None, help="SWF trace files")
+    ap.add_argument("--synthetic", action="store_true",
+                    help="also summarize the deterministic test corpus")
+    ap.add_argument("--nodes", type=int, default=None,
+                    help="capacity override (default: trace header "
+                         "MaxNodes/MaxProcs, else max job size)")
+    args = ap.parse_args(argv)
+
+    targets: List[Dict[str, object]] = []
+    paths = args.traces or ([] if args.synthetic else
+                            [os.path.join(_REPO, "tests", "data",
+                                          "sample.swf")])
+    for path in paths:
+        targets.append(summarize(parse_swf(path), os.path.basename(path),
+                                 args.nodes))
+    if args.synthetic:
+        targets.append(summarize(synthetic_trace(), "synthetic-corpus",
+                                 args.nodes))
+
+    print("# trace summary (offered load, arrivals, sizes)")
+    print(",".join(COLS))
+    for s in targets:
+        print(",".join(str(s[c]) for c in COLS))
+    for s in targets:
+        buckets = sorted(s["size_hist"])
+        line = " ".join(f"{b}:{s['size_hist'][b]}" for b in buckets)
+        print(f"# {s['trace']} size histogram (pow2 buckets): {line}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,69 @@
+"""Measured-cost calibration: fit the Fig. 3 overhead model from real runs.
+
+The simulator's :class:`~repro.rms.costmodel.ReconfigCostModel` constants
+were hand-fit to the paper's Table 2 / Fig. 3.  This package closes the
+loop against the jax runtime so every scheduling result can carry measured
+— not assumed — reconfiguration costs.  The pipeline has four stages:
+
+**1. measure** (:mod:`repro.calib.measure`) — time real
+:func:`~repro.core.redistribute.expand_plan` /
+:func:`~repro.core.redistribute.shrink_plan` redistributions (a
+``jax.device_put`` between meshes of different slice counts),
+``migrate_slice`` and ``ReconfigPolicy.decide`` latency, across a grid of
+``(old_nodes, new_nodes, data_bytes)``::
+
+    from repro.calib import MeasureConfig, measure_grid
+    samples, env = measure_grid(MeasureConfig(backend="jax"))
+
+The ``plan`` backend generates the same sample schema deterministically
+(seeded noise around hidden ground-truth parameters) — that is what the
+committed golden artifact and the fit-recovery tests use.
+
+**2. fit** (:mod:`repro.calib.fit`) — ordinary least squares for
+``link_bw``, ``spawn_s``, ``shrink_sync_s``, ``sched_base_s``,
+``sched_per_node_s`` (the model is linear in all of them), with residual
+diagnostics and the Fig. 3b shape checks (more participants ⇒ faster;
+shrink ≥ expand at equal geometry)::
+
+    from repro.calib import fit_samples
+    fitted, residuals, checks = fit_samples(samples)
+
+**3. artifact** (:mod:`repro.calib.artifact`) — a versioned,
+byte-deterministic JSON document (schema ``repro.calib`` v1) bundling
+samples + fitted parameters + diagnostics under a content-hash
+``calibration_id``; ``tests/data/golden_calibration.json`` pins the CI
+grid::
+
+    from repro.calib import load_calibration, write_calibration
+    write_calibration("calib.json", doc);  doc = load_calibration("calib.json")
+
+**4. consume** — ``ReconfigCostModel.from_artifact(doc_or_path)`` builds
+the fitted model; ``SimConfig(cost=...)`` threads it through the
+simulator *and* the moldable start-size optimizer
+(``Scheduler(..., cost=...)``); ``repro.rms.sweep`` rows record the
+``calibration_id`` provenance column (schema v3);
+``benchmarks/fig3_reconfig_overhead.py --calibration`` and
+``benchmarks/table2_actions.py --calibration`` re-derive the paper tables
+under measured costs::
+
+    model = ReconfigCostModel.from_artifact("calib.json")
+    ClusterSimulator(jobs, SimConfig(cost=model)).run()
+
+One-shot CLI (also the CI smoke step)::
+
+    PYTHONPATH=src python -m repro.calib.measure --backend plan \\
+        --check tests/data/golden_calibration.json
+"""
+from repro.calib.artifact import (PAPER_FIT_ID, dumps_calibration,
+                                  load_calibration, make_artifact,
+                                  validate_calibration, write_calibration)
+from repro.calib.fit import (FitError, fit_report_rows, fit_samples,
+                             validate_fit)
+from repro.calib.measure import MeasureConfig, calibrate, measure_grid
+
+__all__ = [
+    "MeasureConfig", "measure_grid", "calibrate",
+    "fit_samples", "validate_fit", "fit_report_rows", "FitError",
+    "make_artifact", "validate_calibration", "load_calibration",
+    "write_calibration", "dumps_calibration", "PAPER_FIT_ID",
+]

@@ -1,0 +1,5 @@
+"""``python -m repro.calib`` — the measure → fit → artifact CLI."""
+from repro.calib.measure import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -4,7 +4,8 @@ from repro.core.dmr import DMR, RMSProtocol
 from repro.core.meshes import (make_mesh, mesh_model_ways, mesh_num_slices,
                                resized_mesh)
 from repro.core.redistribute import (Transfer, expand_plan, migrate_slice,
-                                     shrink_plan, transfer_time_s)
+                                     plan_stats, shrink_plan,
+                                     transfer_time_s)
 from repro.core.reshard import (checkpoint_reshard, ownership_map, reshard,
                                 state_shardings, timed_reshard)
 from repro.core.sharding import (FSDP_RULES, LONG_CONTEXT_RULES, TP_DP_RULES,
@@ -14,6 +15,7 @@ __all__ = [
     "Action", "Decision", "ResizeHandler", "DMR", "RMSProtocol",
     "make_mesh", "mesh_num_slices", "mesh_model_ways", "resized_mesh",
     "Transfer", "expand_plan", "shrink_plan", "transfer_time_s",
+    "plan_stats",
     "migrate_slice", "reshard", "checkpoint_reshard", "timed_reshard",
     "state_shardings", "ownership_map",
     "ShardingRules", "TP_DP_RULES", "FSDP_RULES", "LONG_CONTEXT_RULES",

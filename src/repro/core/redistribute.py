@@ -22,7 +22,7 @@ Three artefacts live here:
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -80,16 +80,13 @@ def shrink_plan(p: int, q: int, nbytes: int) -> List[Transfer]:
 
 # -- Fig. 3 cost model -------------------------------------------------------
 
-def transfer_time_s(plan: List[Transfer], *, link_bw: float,
-                    latency_s: float = 0.0,
-                    sync_s_per_participant: float = 0.0) -> float:
-    """Completion time of a redistribution plan.
+def plan_stats(plan: List[Transfer]) -> Tuple[int, int]:
+    """``(participants, busiest_link_bytes)`` of a transfer plan.
 
-    Each slice sends/receives over its own link at ``link_bw`` B/s; the plan
-    completes when the busiest link drains.  ``sync_s_per_participant``
-    models the shrink barrier (ACK collection at the management node,
-    §5.2.2) — the paper observes shrinks cost more synchronization the
-    larger the participant-count gap.
+    These are the two features the Fig.-3 cost model (and the calibration
+    fitter in :mod:`repro.calib.fit`) is linear in: the busiest per-slice
+    link bounds the transfer, the participant count drives the shrink
+    synchronization barrier.
     """
     send = {}
     recv = {}
@@ -102,8 +99,23 @@ def transfer_time_s(plan: List[Transfer], *, link_bw: float,
         send[t.src] = send.get(t.src, 0) + t.nbytes
         recv[t.dst] = recv.get(t.dst, 0) + t.nbytes
     busiest = max([*send.values(), *recv.values(), 0])
+    return len(participants), busiest
+
+
+def transfer_time_s(plan: List[Transfer], *, link_bw: float,
+                    latency_s: float = 0.0,
+                    sync_s_per_participant: float = 0.0) -> float:
+    """Completion time of a redistribution plan.
+
+    Each slice sends/receives over its own link at ``link_bw`` B/s; the plan
+    completes when the busiest link drains.  ``sync_s_per_participant``
+    models the shrink barrier (ACK collection at the management node,
+    §5.2.2) — the paper observes shrinks cost more synchronization the
+    larger the participant-count gap.
+    """
+    participants, busiest = plan_stats(plan)
     return latency_s + busiest / link_bw + \
-        sync_s_per_participant * len(participants)
+        sync_s_per_participant * participants
 
 
 # -- In-mesh slice migration (straggler path) -------------------------------

@@ -84,7 +84,14 @@ PAPER_APPS: Dict[str, AppModel] = {
 
 @dataclasses.dataclass(frozen=True)
 class ReconfigCostModel:
-    """Fig. 3 overhead model."""
+    """Fig. 3 overhead model.
+
+    The defaults are the hand-fit paper constants;
+    :meth:`from_artifact` replaces them with parameters fitted from
+    measured redistribute runs (:mod:`repro.calib`), tagging the instance
+    with the artifact's ``calibration_id`` so consumers (sweep rows,
+    benchmarks) can record which calibration produced their numbers.
+    """
 
     link_bw: float = 5e9            # FDR10 InfiniBand ≈ 5 GB/s per node
     sched_base_s: float = 0.35      # Slurm resize transaction (Table 2 ≈0.42)
@@ -92,6 +99,23 @@ class ReconfigCostModel:
     noaction_s: float = 0.009       # Table 2 "no action" ≈ 0.009–0.014 s
     spawn_s: float = 0.05           # process-spawn / mesh-rebuild constant
     shrink_sync_s: float = 0.004    # ACK sync per participant (§5.2.2)
+    calibration_id: Optional[str] = None   # None: the paper-fit constants
+
+    @classmethod
+    def from_artifact(cls, source) -> "ReconfigCostModel":
+        """Build the model from a calibration artifact (path or loaded
+        document) produced by :mod:`repro.calib`."""
+        from repro.calib.artifact import (load_calibration,
+                                          validate_calibration)
+        doc = load_calibration(source) if isinstance(source, str) \
+            else validate_calibration(source)
+        f = doc["fitted"]
+        return cls(link_bw=float(f["link_bw"]),
+                   sched_base_s=float(f["sched_base_s"]),
+                   sched_per_node_s=float(f["sched_per_node_s"]),
+                   spawn_s=float(f["spawn_s"]),
+                   shrink_sync_s=float(f["shrink_sync_s"]),
+                   calibration_id=str(doc["calibration_id"]))
 
     def schedule_time(self, action: Action, nodes_involved: int,
                       rng=None) -> float:

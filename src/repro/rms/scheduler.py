@@ -100,7 +100,8 @@ def register_policy(name: str):
     return deco
 
 
-def make_policy(cluster: Cluster, config: SchedulerConfig
+def make_policy(cluster: Cluster, config: SchedulerConfig,
+                cost: Optional[ReconfigCostModel] = None
                 ) -> "SchedulingPolicy":
     try:
         cls = POLICY_REGISTRY[config.policy]
@@ -108,7 +109,7 @@ def make_policy(cluster: Cluster, config: SchedulerConfig
         raise ValueError(
             f"unknown scheduling policy {config.policy!r}; "
             f"registered: {sorted(POLICY_REGISTRY)}") from None
-    return cls(cluster, config)
+    return cls(cluster, config, cost=cost)
 
 
 # ---------------------------------------------------------------------------
@@ -124,9 +125,15 @@ class SchedulingPolicy:
 
     name = "base"
 
-    def __init__(self, cluster: Cluster, config: SchedulerConfig):
+    def __init__(self, cluster: Cluster, config: SchedulerConfig,
+                 cost: Optional[ReconfigCostModel] = None):
         self.cluster = cluster
         self.config = config
+        # The reconfiguration cost model policies reason with (moldable's
+        # start-size optimizer) — calibrated when the caller threads a
+        # fitted model through (``Scheduler(..., cost=...)``), the
+        # paper-fit constants otherwise.
+        self.cost = cost if cost is not None else ReconfigCostModel()
 
     # -- priority ------------------------------------------------------------
 
@@ -358,8 +365,9 @@ class SJFPolicy(EasyBackfillPolicy):
     wait at most the guard age plus the drain of already-started work.
     """
 
-    def __init__(self, cluster: Cluster, config: SchedulerConfig):
-        super().__init__(cluster, config)
+    def __init__(self, cluster: Cluster, config: SchedulerConfig,
+                 cost: Optional[ReconfigCostModel] = None):
+        super().__init__(cluster, config, cost)
         self._est: Optional[RuntimeEstimate] = None
 
     def priority(self, job: Job, now: float) -> float:
@@ -391,8 +399,9 @@ class FairSharePolicy(EasyBackfillPolicy):
     comparable to the other priority weights.
     """
 
-    def __init__(self, cluster: Cluster, config: SchedulerConfig):
-        super().__init__(cluster, config)
+    def __init__(self, cluster: Cluster, config: SchedulerConfig,
+                 cost: Optional[ReconfigCostModel] = None):
+        super().__init__(cluster, config, cost)
         self._usage: Dict[int, float] = {}
         self._last_t: Optional[float] = None
         self._known: Dict[int, Job] = {}   # every job ever seen, until final
@@ -487,8 +496,9 @@ class PreemptiveBackfillPolicy(EasyBackfillPolicy):
     starts, so capacity accounting stays in one place.
     """
 
-    def __init__(self, cluster: Cluster, config: SchedulerConfig):
-        super().__init__(cluster, config)
+    def __init__(self, cluster: Cluster, config: SchedulerConfig,
+                 cost: Optional[ReconfigCostModel] = None):
+        super().__init__(cluster, config, cost)
         self.preemptions: List[Tuple[Job, int]] = []
 
     def pop_preemptions(self) -> List[Tuple[Job, int]]:
@@ -569,12 +579,10 @@ class MoldableStartPolicy(EasyBackfillPolicy):
     jobs — the :class:`ReconfigCostModel` cost of factor-stepping from the
     start size to the preferred size afterwards.  Jobs whose range contains
     no power of two start at their requested size unchanged.
-    """
 
-    def __init__(self, cluster: Cluster, config: SchedulerConfig,
-                 cost: Optional[ReconfigCostModel] = None):
-        super().__init__(cluster, config)
-        self.cost = cost if cost is not None else ReconfigCostModel()
+    Uses the base class's ``self.cost`` — so a calibrated model threaded
+    through ``SimConfig(cost=...)`` tightens the start-size estimates too.
+    """
 
     # -- the optimizer -------------------------------------------------------
 
@@ -647,10 +655,11 @@ class Scheduler:
     """Thin facade: owns the policy selected by ``SchedulerConfig.policy``."""
 
     def __init__(self, cluster: Cluster,
-                 config: SchedulerConfig = SchedulerConfig()):
+                 config: SchedulerConfig = SchedulerConfig(),
+                 cost: Optional[ReconfigCostModel] = None):
         self.cluster = cluster
         self.config = config
-        self.policy = make_policy(cluster, config)
+        self.policy = make_policy(cluster, config, cost=cost)
 
     def priority(self, job: Job, now: float) -> float:
         return self.policy.priority(job, now)

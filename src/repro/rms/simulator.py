@@ -121,7 +121,11 @@ class ClusterSimulator:
         self.jobs = jobs
         self.cluster = Cluster(config.num_nodes)
         self.policy = ReconfigPolicy(config.policy)
-        self.scheduler = Scheduler(self.cluster, config.sched)
+        # The scheduler's moldable start-size optimizer and the resize
+        # accounting below share one cost model — calibrated when
+        # ``config.cost`` came from a calibration artifact.
+        self.scheduler = Scheduler(self.cluster, config.sched,
+                                   cost=config.cost)
         self.rng = np.random.default_rng(config.seed)
         self.engine = SimulationEngine()
         self.actions: List[ActionRecord] = []

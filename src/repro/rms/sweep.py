@@ -11,16 +11,23 @@ Artifact schema (``SCHEMA_ID``/``SCHEMA_VERSION``): a JSON object
 
 .. code-block:: json
 
-    {"schema": "repro.rms.sweep", "version": 2,
+    {"schema": "repro.rms.sweep", "version": 3,
      "grid": {"traces": [...], "policies": [...],
               "mixes": [[r,m,f,e], ...]},
-     "results": [{"trace": ..., "policy": ..., "rigid": ..., ...}]}
+     "results": [{"trace": ..., "policy": ..., "rigid": ...,
+                  "calibration_id": "paper-fit", ...}]}
 
-Schema v2 (this version) widens malleability mixes to four fractions —
-``(rigid, moldable, malleable, evolving)`` — and adds the ``evolving``
-and ``phase_changes`` row columns.  v1 artifacts load transparently:
-:func:`load_artifact` upgrades them in place (``evolving=0.0``,
-``phase_changes=0``).
+Schema v3 (this version) adds the ``calibration_id`` provenance column:
+which reconfiguration-cost calibration (:mod:`repro.calib` artifact) the
+row was simulated under — ``"paper-fit"`` for the hand-fit Table 2/Fig. 3
+constants.  A grid point carries the artifact path in
+``SweepPoint.calibration`` (CLI ``--calibration``); the row records the
+artifact's content-hash id, so results are machine-independent.
+Schema v2 widened malleability mixes to four fractions —
+``(rigid, moldable, malleable, evolving)`` — and added the ``evolving``
+and ``phase_changes`` row columns.  Older artifacts load transparently:
+:func:`load_artifact` upgrades v1 and v2 in place (``evolving=0.0``,
+``phase_changes=0``, ``calibration_id="paper-fit"``).
 
 ``results`` rows carry only deterministic fields (no wall-clock times),
 floats rounded to :data:`ROUND_DIGITS` decimals, rows sorted by
@@ -44,16 +51,19 @@ import multiprocessing
 import os
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.calib.artifact import PAPER_FIT_ID
+
 SCHEMA_ID = "repro.rms.sweep"
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 ROUND_DIGITS = 6
 
 #: Fixed CSV column order — the row schema, version ``SCHEMA_VERSION``.
 COLUMNS = ("trace", "policy", "rigid", "moldable", "malleable", "evolving",
            "flexible", "scheduling", "num_nodes", "seed", "time_scale",
-           "jobs", "completed", "makespan_s", "util_avg_pct", "util_std_pct",
-           "avg_wait_s", "avg_exec_s", "avg_completion_s", "expands",
-           "shrinks", "preempts", "requeues", "timeouts", "phase_changes")
+           "calibration_id", "jobs", "completed", "makespan_s",
+           "util_avg_pct", "util_std_pct", "avg_wait_s", "avg_exec_s",
+           "avg_completion_s", "expands", "shrinks", "preempts", "requeues",
+           "timeouts", "phase_changes")
 
 #: Default smoke grid (2 policies × 3 mixes) — also the golden-artifact grid.
 SMOKE_POLICIES = ("easy", "sjf")
@@ -90,6 +100,9 @@ class SweepPoint:
     scheduling: str = "sync"
     time_scale: float = 1.0
     max_jobs: Optional[int] = None
+    # Path to a repro.calib calibration artifact; None => paper-fit
+    # constants.  The artifact's calibration_id lands in the row.
+    calibration: Optional[str] = None
 
     @property
     def label(self) -> str:
@@ -133,7 +146,8 @@ def _action_counts(actions) -> Dict[str, int]:
 def report_row(report, *, trace: str, policy: str,
                mix: Sequence[float], flexible: bool,
                scheduling: str = "sync", seed: int = 7,
-               time_scale: float = 1.0) -> Dict[str, object]:
+               time_scale: float = 1.0,
+               calibration_id: str = PAPER_FIT_ID) -> Dict[str, object]:
     """Serialize a :class:`~repro.rms.simulator.SimReport` into the shared
     row schema — deterministic fields only, floats rounded."""
     from repro.rms.job import JobState
@@ -152,6 +166,7 @@ def report_row(report, *, trace: str, policy: str,
         "flexible": bool(flexible), "scheduling": scheduling,
         "num_nodes": report.config.num_nodes, "seed": seed,
         "time_scale": round(time_scale, ROUND_DIGITS),
+        "calibration_id": calibration_id,
         "jobs": len(report.jobs), "completed": completed,
         "makespan_s": round(float(report.makespan), ROUND_DIGITS),
         "util_avg_pct": round(float(util_avg), ROUND_DIGITS),
@@ -166,6 +181,7 @@ def report_row(report, *, trace: str, policy: str,
 
 def run_point(point: SweepPoint) -> Dict[str, object]:
     """Replay one grid point (top-level: picklable for worker pools)."""
+    from repro.rms.costmodel import ReconfigCostModel
     from repro.rms.simulator import ClusterSimulator, SimConfig
     from repro.rms.scheduler import SchedulerConfig
     from repro.workload.swf import MalleabilityMix, jobs_from_swf, parse_swf
@@ -180,11 +196,17 @@ def run_point(point: SweepPoint) -> Dict[str, object]:
     cfg = SimConfig(num_nodes=point.num_nodes, flexible=point.flexible,
                     scheduling=point.scheduling, seed=point.seed,
                     sched=SchedulerConfig(policy=point.policy))
+    calibration_id = PAPER_FIT_ID
+    if point.calibration:
+        cost = ReconfigCostModel.from_artifact(point.calibration)
+        cfg = dataclasses.replace(cfg, cost=cost)
+        calibration_id = cost.calibration_id or PAPER_FIT_ID
     report = ClusterSimulator(jobs, cfg, apps=apps).run()
     return report_row(report, trace=point.label, policy=point.policy,
                       mix=point.mix, flexible=point.flexible,
                       scheduling=point.scheduling, seed=point.seed,
-                      time_scale=point.time_scale)
+                      time_scale=point.time_scale,
+                      calibration_id=calibration_id)
 
 
 # ---------------------------------------------------------------------------
@@ -197,7 +219,8 @@ def row_key(row: Dict[str, object]) -> Tuple:
     return (row["trace"], row["policy"], row["rigid"], row["moldable"],
             row["malleable"], row.get("evolving", 0.0),
             not row["flexible"], row["scheduling"],
-            row["num_nodes"], row["seed"], row["time_scale"])
+            row["num_nodes"], row["seed"], row["time_scale"],
+            row.get("calibration_id", PAPER_FIT_ID))
 
 
 def run_sweep(points: Sequence[SweepPoint], *, workers: int = 0
@@ -239,6 +262,15 @@ def _upgrade_v1(doc: Dict[str, object]) -> Dict[str, object]:
     grid = doc.get("grid") or {}
     if "mixes" in grid:
         grid["mixes"] = [list(norm_mix(m)) for m in grid["mixes"]]
+    doc["version"] = 2
+    return doc
+
+
+def _upgrade_v2(doc: Dict[str, object]) -> Dict[str, object]:
+    """In-place v2 → v3: pre-calibration artifacts were simulated under
+    the hand-fit constants."""
+    for row in doc.get("results", []):
+        row.setdefault("calibration_id", PAPER_FIT_ID)
     doc["version"] = SCHEMA_VERSION
     return doc
 
@@ -250,7 +282,11 @@ def load_artifact(path: str) -> Dict[str, object]:
         raise ValueError(f"not a sweep artifact: schema={doc.get('schema')!r}")
     version = doc.get("version")
     if version == 1:
-        return _upgrade_v1(doc)
+        doc = _upgrade_v1(doc)
+        version = doc["version"]
+    if version == 2:
+        doc = _upgrade_v2(doc)
+        version = doc["version"]
     if version != SCHEMA_VERSION:
         raise ValueError(f"sweep artifact version {version} != "
                          f"supported {SCHEMA_VERSION}")
@@ -329,6 +365,9 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=7)
     ap.add_argument("--time-scale", type=float, default=1.0)
     ap.add_argument("--max-jobs", type=int, default=None)
+    ap.add_argument("--calibration", default=None,
+                    help="repro.calib artifact path: simulate under its "
+                         "fitted cost model (rows record its id)")
     ap.add_argument("--workers", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny fixed grid (the golden-artifact grid)")
@@ -341,20 +380,29 @@ def main(argv=None) -> int:
 
     traces = args.trace or [os.path.normpath(default_trace)]
     if args.smoke:
+        if args.calibration:
+            ap.error("--smoke is the fixed paper-fit golden grid; "
+                     "run a calibrated sweep without --smoke")
         points, grid = smoke_grid(traces[0], num_nodes=args.nodes,
                                   seed=args.seed)
     else:
         policies = [p.strip() for p in args.policies.split(",") if p.strip()]
         mixes = parse_mixes(args.mixes)
         flexibles = (False, True) if args.fixed else (True,)
+        calibration_id = PAPER_FIT_ID
+        if args.calibration:
+            from repro.calib.artifact import load_calibration
+            calibration_id = str(
+                load_calibration(args.calibration)["calibration_id"])
         points = build_grid(traces, policies, mixes, flexibles,
                             num_nodes=args.nodes, seed=args.seed,
                             time_scale=args.time_scale,
-                            max_jobs=args.max_jobs)
+                            max_jobs=args.max_jobs,
+                            calibration=args.calibration)
         grid = {"traces": [os.path.basename(t) for t in traces],
                 "policies": policies, "mixes": [list(m) for m in mixes],
                 "flexibles": list(flexibles), "num_nodes": args.nodes,
-                "seed": args.seed}
+                "seed": args.seed, "calibration_id": calibration_id}
     rows = run_sweep(points, workers=args.workers)
     doc = artifact(rows, grid)
     for line in csv_lines(rows):

@@ -1,0 +1,220 @@
+"""Measured-cost calibration subsystem: measure → fit → artifact → consume.
+
+The acceptance lock: re-measuring the deterministic CI grid, re-fitting,
+and re-serializing reproduces ``tests/data/golden_calibration.json``
+byte-for-byte, and a sweep run under the fitted model records the
+artifact's ``calibration_id`` in its (schema v3) rows.
+
+Regenerate the golden file (after an *intentional* grid/fitter change):
+
+    PYTHONPATH=src:tests python -c \\
+        "import test_calib as t; t.write_golden()"
+"""
+import copy
+import json
+import os
+
+import pytest
+
+from repro.calib import (FitError, MeasureConfig, calibrate,
+                         dumps_calibration, fit_samples, load_calibration,
+                         measure_grid, validate_calibration)
+from repro.calib.artifact import content_id
+from repro.calib.measure import (MiB, PLAN_NOISE_SIGMA, TRUE_PARAMS,
+                                 resize_features)
+from repro.rms.costmodel import ReconfigCostModel
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+GOLDEN = os.path.join(DATA, "golden_calibration.json")
+
+
+def golden_doc():
+    return load_calibration(GOLDEN)
+
+
+def write_golden():
+    from repro.calib import write_calibration
+    write_calibration(GOLDEN, calibrate(MeasureConfig()))
+
+
+# -- the golden round trip ---------------------------------------------------
+
+def test_measure_fit_reproduces_golden_artifact_bytes():
+    """Acceptance lock #1: the CI grid round trip is byte-deterministic."""
+    doc = calibrate(MeasureConfig())
+    with open(GOLDEN) as fh:
+        assert dumps_calibration(doc) == fh.read()
+
+
+def test_refit_from_golden_samples_reproduces_fitted_params():
+    """Fitting the *stored* samples reproduces the stored fit exactly —
+    the artifact is self-consistent, not just a cached pair."""
+    doc = golden_doc()
+    fitted, residuals, checks = fit_samples(doc["samples"])
+    assert fitted == doc["fitted"]
+    assert residuals == doc["residuals"]
+    assert checks == doc["checks"]
+
+
+def test_fit_recovers_hidden_truth_within_tolerance():
+    """The plan backend's noise is 3%: the fit must land within 5% of the
+    ground-truth parameters it was generated from (so it cannot be just
+    echoing the paper defaults, which are further away)."""
+    f = golden_doc()["fitted"]
+    for key, tol in (("link_bw", 0.05), ("spawn_s", 0.05),
+                     ("shrink_sync_s", 0.10), ("sched_base_s", 0.05),
+                     ("sched_per_node_s", 0.25)):
+        rel = abs(f[key] - TRUE_PARAMS[key]) / TRUE_PARAMS[key]
+        assert rel <= tol, f"{key}: fitted {f[key]} vs true " \
+                           f"{TRUE_PARAMS[key]} (rel err {rel:.3f})"
+
+
+def test_golden_checks_and_diagnostics():
+    doc = golden_doc()
+    assert doc["backend"] == "plan"
+    assert all(doc["checks"].values())
+    assert doc["residuals"]["resize_r2"] > 0.99
+    assert doc["residuals"]["n_resize"] > 0
+    assert doc["paper_defaults"]["link_bw"] == ReconfigCostModel().link_bw
+
+
+# -- artifact schema / integrity ---------------------------------------------
+
+def test_load_rejects_foreign_schema_version_and_tampering(tmp_path):
+    doc = golden_doc()
+    bad = copy.deepcopy(doc)
+    bad["schema"] = "nope"
+    with pytest.raises(ValueError, match="not a calibration artifact"):
+        validate_calibration(bad)
+    bad = copy.deepcopy(doc)
+    bad["version"] = 99
+    with pytest.raises(ValueError, match="version"):
+        validate_calibration(bad)
+    # hand-editing any part of the body invalidates the content hash:
+    # a sample, the fit, or the backend label (a plan run must not be
+    # relabelable as a hardware measurement)
+    for key, value in (("samples", None), ("fitted", None),
+                       ("backend", "jax"), ("residuals", {"resize_r2": 1.0})):
+        bad = copy.deepcopy(doc)
+        if key == "samples":
+            bad["samples"][0]["seconds"] = 123.0
+        elif key == "fitted":
+            bad["fitted"]["link_bw"] = 1e12
+        else:
+            bad[key] = value
+        with pytest.raises(ValueError, match="calibration_id"):
+            validate_calibration(bad)
+
+
+def test_calibration_id_is_content_derived():
+    doc = golden_doc()
+    assert doc["calibration_id"] == content_id(doc)
+    perturbed = copy.deepcopy(doc)
+    perturbed["samples"][0]["seconds"] += 1e-6
+    assert content_id(perturbed) != doc["calibration_id"]
+    relabeled = copy.deepcopy(doc)
+    relabeled["backend"] = "jax"
+    assert content_id(relabeled) != doc["calibration_id"]
+
+
+def test_fit_error_on_bandwidth_free_samples():
+    """All-equal busiest bytes ⇒ no bandwidth signal ⇒ explicit FitError,
+    not a silently absurd model."""
+    samples = [{"kind": "expand", "old": 1, "new": 2, "bytes": 64,
+                "participants": 2, "busiest_bytes": 32,
+                "seconds": 0.05 + i * 0.01} for i in range(4)]
+    with pytest.raises(FitError):
+        fit_samples(samples)
+
+
+# -- consumption -------------------------------------------------------------
+
+def test_from_artifact_builds_tagged_model():
+    doc = golden_doc()
+    model = ReconfigCostModel.from_artifact(GOLDEN)
+    assert model.calibration_id == doc["calibration_id"]
+    assert model.link_bw == doc["fitted"]["link_bw"]
+    assert model.spawn_s == doc["fitted"]["spawn_s"]
+    assert model.shrink_sync_s == doc["fitted"]["shrink_sync_s"]
+    # loading from the parsed doc is equivalent
+    assert ReconfigCostModel.from_artifact(doc) == model
+    # the un-fitted constant keeps its paper default
+    assert model.noaction_s == ReconfigCostModel().noaction_s
+
+
+def test_fitted_model_keeps_fig3b_shape():
+    model = ReconfigCostModel.from_artifact(GOLDEN)
+    assert model.resize_time(1, 2, 1 << 30) > \
+        model.resize_time(32, 64, 1 << 30)
+    assert model.resize_time(64, 32, 1 << 30) >= \
+        model.resize_time(32, 64, 1 << 30)
+
+
+def test_sweep_rows_record_calibration_provenance():
+    """Acceptance lock #2: a sweep point run under the fitted model
+    carries the artifact's calibration_id in its schema-v3 row."""
+    from repro.rms import sweep
+
+    trace = os.path.join(DATA, "sample.swf")
+    point = sweep.SweepPoint(trace=trace, policy="easy",
+                             mix=(0.0, 0.0, 1.0, 0.0), max_jobs=8,
+                             calibration=GOLDEN)
+    row = sweep.run_point(point)
+    assert row["calibration_id"] == golden_doc()["calibration_id"]
+    assert "calibration_id" in sweep.COLUMNS
+    # without an artifact the row records the paper-fit constants
+    base = sweep.run_point(sweep.SweepPoint(
+        trace=trace, policy="easy", mix=(0.0, 0.0, 1.0, 0.0), max_jobs=8))
+    assert base["calibration_id"] == sweep.PAPER_FIT_ID
+
+
+def test_scheduler_moldable_uses_threaded_cost_model():
+    """The calibrated model reaches the moldable start-size optimizer."""
+    from repro.rms.cluster import Cluster
+    from repro.rms.scheduler import SchedulerConfig, Scheduler
+
+    model = ReconfigCostModel.from_artifact(GOLDEN)
+    sched = Scheduler(Cluster(64), SchedulerConfig(policy="moldable"),
+                      cost=model)
+    assert sched.policy.cost is model
+    # default stays the paper fit
+    plain = Scheduler(Cluster(64), SchedulerConfig(policy="moldable"))
+    assert plain.policy.cost.calibration_id is None
+
+
+# -- measurement harness -----------------------------------------------------
+
+def test_plan_measurement_grid_shape_and_determinism():
+    cfg = MeasureConfig(geometries=((1, 2), (2, 4)),
+                        data_bytes=(MiB,), repeats=2, seed=5)
+    samples, env = measure_grid(cfg)
+    again, _ = measure_grid(cfg)
+    assert samples == again                       # fully seeded
+    resize = [s for s in samples if s["kind"] in ("expand", "shrink")]
+    sched = [s for s in samples if s["kind"] == "sched"]
+    assert len(resize) == 2 * 2 * 2               # geoms x dirs x repeats
+    assert len(sched) == len(cfg.sched_nodes) * 2
+    assert env["backend"] == "plan"
+    assert env["noise_sigma"] == PLAN_NOISE_SIGMA
+    for s in resize:
+        parts, busiest = resize_features(s["kind"], s["old"], s["new"],
+                                         s["bytes"])
+        assert (s["participants"], s["busiest_bytes"]) == (parts, busiest)
+        assert s["seconds"] > 0
+
+
+def test_jax_backend_smoke_fits_positive_bandwidth():
+    """Real-timing smoke on whatever devices exist (single-device CI uses
+    the host→device link proxy): the fit must produce a finite, positive
+    bandwidth and pass the shape checks."""
+    import math
+
+    cfg = MeasureConfig(backend="jax", geometries=((1, 2), (2, 4)),
+                        data_bytes=(4 * MiB, 16 * MiB), repeats=1)
+    doc = calibrate(cfg)
+    assert doc["backend"] == "jax"
+    bw = doc["fitted"]["link_bw"]
+    assert math.isfinite(bw) and bw > 0
+    assert doc["checks"]["link_bw_positive"]
+    assert doc["checks"]["more_participants_faster"]
+    validate_calibration(doc)                     # id consistent

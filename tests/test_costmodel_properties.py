@@ -1,0 +1,122 @@
+"""Property tests for the Fig. 3 reconfiguration cost model.
+
+Pins the paper's shape claims on ``transfer_time_s`` / ``resize_time``
+across the parameter space (works under the no-hypothesis stub too):
+
+- Fig. 3b: more participants ⇒ faster redistribution at fixed bytes;
+- shrinks cost at least expands at equal geometry (the §5.2.2 per-
+  participant sync term);
+- no-op resizes (same size, or nothing to move) are free;
+- the ``schedule_time`` jitter path (``rng is not None``) respects its
+  distribution floor ``>= 0.2 * base`` (previously untested).
+"""
+import numpy as np
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                              # container has no hypothesis
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.core import expand_plan, plan_stats, shrink_plan, transfer_time_s
+from repro.core.actions import Action
+from repro.rms.costmodel import ReconfigCostModel
+
+sizes = st.sampled_from([1, 2, 4, 8, 16, 32])
+byte_exps = st.integers(20, 33)          # 1 MiB .. 8 GiB
+
+
+@settings(max_examples=40, deadline=None)
+@given(sizes, byte_exps)
+def test_transfer_time_monotone_decreasing_in_participants(p, log_bytes):
+    """Fig. 3b: at fixed bytes, an expand involving more slices is never
+    slower — the per-link chunks shrink as the participant count grows."""
+    nbytes = 2 ** log_bytes
+    times = [transfer_time_s(expand_plan(q, 2 * q, nbytes), link_bw=5e9)
+             for q in (p, 2 * p, 4 * p)]
+    assert times[0] >= times[1] >= times[2]
+    assert times[0] > times[2]           # strictly faster across a 4x jump
+
+
+@settings(max_examples=40, deadline=None)
+@given(sizes, byte_exps)
+def test_shrink_costs_at_least_expand_at_equal_geometry(p, log_bytes):
+    """q→p shrink ≥ p→q expand at equal bytes: the shrink moves the same
+    per-link maximum but pays the per-participant sync barrier."""
+    nbytes = 2 ** log_bytes
+    q = 2 * p
+    model = ReconfigCostModel()
+    expand = model.resize_time(p, q, nbytes)
+    shrink = model.resize_time(q, p, nbytes)
+    assert shrink >= expand
+    assert shrink > expand               # default sync term is positive
+
+
+@settings(max_examples=20, deadline=None)
+@given(sizes, byte_exps)
+def test_noop_resize_is_free(p, log_bytes):
+    model = ReconfigCostModel()
+    assert model.resize_time(p, p, 2 ** log_bytes) == 0.0
+    assert model.resize_time(p, 2 * p, 0) == 0.0     # nothing to move
+
+
+@settings(max_examples=20, deadline=None)
+@given(sizes, byte_exps)
+def test_plan_stats_matches_transfer_time_features(p, log_bytes):
+    """plan_stats (the calibration fitter's feature extractor) agrees with
+    what transfer_time_s charges."""
+    nbytes = 2 ** log_bytes
+    plan = shrink_plan(2 * p, p, nbytes)
+    participants, busiest = plan_stats(plan)
+    t = transfer_time_s(plan, link_bw=5e9, sync_s_per_participant=0.004)
+    assert t == busiest / 5e9 + 0.004 * participants
+    assert participants == 2 * p         # every old rank takes part
+
+
+# -- schedule_time jitter path (previously untested) -------------------------
+
+def test_schedule_time_jitter_floor_and_spread():
+    """rng path: multiplicative jitter is clipped at 0.2x base, actually
+    varies, and stays distributed around the base."""
+    model = ReconfigCostModel()
+    base = model.schedule_time(Action.EXPAND, 16)           # rng=None
+    rng = np.random.default_rng(42)
+    draws = np.array([model.schedule_time(Action.EXPAND, 16, rng=rng)
+                      for _ in range(2000)])
+    assert float(draws.min()) >= 0.2 * base                 # the pinned floor
+    assert float(draws.std()) > 0.0                         # it does jitter
+    # mean of max(0.2, 1 + 0.15 N) is ~1: within 2% at n=2000, seed 42
+    assert abs(float(draws.mean()) - base) <= 0.02 * base
+    assert float(draws.max()) <= 2.0 * base                 # sane upper tail
+
+
+def test_schedule_time_jitter_clips_extreme_draws_to_floor():
+    """A normal draw below -16/3 sigma must clip exactly to 0.2x base."""
+
+    class _FloorRng:
+        @staticmethod
+        def standard_normal():
+            return -1000.0
+
+    model = ReconfigCostModel()
+    base = model.schedule_time(Action.SHRINK, 8)
+    assert model.schedule_time(Action.SHRINK, 8, rng=_FloorRng()) == \
+        0.2 * base
+
+
+def test_schedule_time_jitter_deterministic_under_seed():
+    model = ReconfigCostModel()
+    a = [model.schedule_time(Action.EXPAND, 4,
+                             rng=np.random.default_rng(7))
+         for _ in range(3)]
+    b = [model.schedule_time(Action.EXPAND, 4,
+                             rng=np.random.default_rng(7))
+         for _ in range(3)]
+    assert a == b
+
+
+def test_noaction_schedule_time_jitters_too():
+    model = ReconfigCostModel()
+    rng = np.random.default_rng(0)
+    draws = {model.schedule_time(Action.NO_ACTION, 1, rng=rng)
+             for _ in range(32)}
+    assert len(draws) > 1
+    assert min(draws) >= 0.2 * model.noaction_s

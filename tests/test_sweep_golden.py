@@ -64,6 +64,8 @@ def test_artifact_schema_versioned_and_complete():
             f"row missing columns: {set(sweep.COLUMNS) - set(row)}"
         assert row["trace"] == "sample.swf"     # label, not a path
         assert row["completed"] == row["jobs"] == 24
+        # golden grid runs under the hand-fit constants (provenance v3)
+        assert row["calibration_id"] == sweep.PAPER_FIT_ID
     # rows sorted by the canonical key
     keys = [sweep.row_key(r) for r in doc["results"]]
     assert keys == sorted(keys)
@@ -136,6 +138,28 @@ def test_load_artifact_upgrades_v1(tmp_path):
     row = doc["results"][0]
     assert row["evolving"] == 0.0
     assert row["phase_changes"] == 0
+    # the v1 → v2 → v3 chain lands at the current schema
+    assert row["calibration_id"] == sweep.PAPER_FIT_ID
     assert doc["grid"]["mixes"] == [[0.0, 0.0, 1.0, 0.0]]
-    # upgraded rows sort with the v2 key
+    # upgraded rows sort with the current key
     assert sweep.row_key(row)
+
+
+def test_load_artifact_upgrades_v2(tmp_path):
+    """Pre-calibration (v2) artifacts stay loadable: rows gain the
+    paper-fit calibration_id provenance."""
+    v2 = {"schema": sweep.SCHEMA_ID, "version": 2,
+          "grid": {"mixes": [[0.1, 0.2, 0.4, 0.3]]},
+          "results": [{"trace": "t.swf", "policy": "sjf", "rigid": 0.1,
+                       "moldable": 0.2, "malleable": 0.4, "evolving": 0.3,
+                       "flexible": True, "scheduling": "sync",
+                       "num_nodes": 64, "seed": 7, "time_scale": 1.0,
+                       "phase_changes": 3, "makespan_s": 10.0}]}
+    path = tmp_path / "v2.json"
+    path.write_text(json.dumps(v2))
+    doc = sweep.load_artifact(str(path))
+    assert doc["version"] == sweep.SCHEMA_VERSION
+    row = doc["results"][0]
+    assert row["calibration_id"] == sweep.PAPER_FIT_ID
+    assert row["evolving"] == 0.3            # v2 fields untouched
+    assert sweep.row_key(row)[-1] == sweep.PAPER_FIT_ID
