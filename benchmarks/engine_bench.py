@@ -1,0 +1,245 @@
+"""Engine-throughput benchmark: events/sec over the synthetic corpus.
+
+The sweep scale-out work (ROADMAP "sweep scale-out + engine raw speed")
+needs the inner engine's dispatch rate pinned PR-over-PR the same way the
+golden traces pin semantics: this benchmark replays a fixed set of
+scenarios from the deterministic synthetic SWF corpus
+(``tests/synthetic_swf.py``) through :class:`ClusterSimulator` and reports
+
+- **deterministic fields** — dispatched engine events, recorded actions,
+  completed jobs, makespan — which must match the committed trajectory
+  artifact ``BENCH_engine.json`` exactly (CI fails on drift: a semantics
+  change must be intentional and regenerate the artifact), and
+- **timings** — wall seconds and events/sec — which are machine-dependent
+  and *informative only*: they are recorded in the trajectory so speedups
+  and regressions are visible in review, but never byte-compared.
+
+Trajectory artifact schema (``BENCH_engine.json``)::
+
+    {"schema": "repro.bench.engine", "version": 1,
+     "workload": {"n_jobs": ..., "num_nodes": ..., "seed": ...,
+                  "time_scale": ...},
+     "entries": [{"label": "...",
+                  "deterministic": {"<scenario>": {"dispatched": ...,
+                      "actions": ..., "completed": ..., "makespan_s": ...},
+                      "total_dispatched": ...},
+                  "timings": {"<scenario>": {"wall_s": ...,
+                      "events_per_sec": ...},
+                      "total_wall_s": ..., "events_per_sec": ...}}]}
+
+``entries`` is append-only history (oldest first); CI checks the *last*
+entry's deterministic fields against a fresh run.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/engine_bench.py            # print only
+    PYTHONPATH=src python benchmarks/engine_bench.py \\
+        --append BENCH_engine.json --label "PR 6"               # record
+    PYTHONPATH=src python benchmarks/engine_bench.py \\
+        --check BENCH_engine.json                               # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCHEMA_ID = "repro.bench.engine"
+SCHEMA_VERSION = 1
+
+#: Canonical workload parameters — the committed trajectory is only
+#: comparable across entries because these never vary per run.
+WORKLOAD = {"n_jobs": 1000, "num_nodes": 64, "seed": 7, "time_scale": 0.05}
+
+#: (label, policy, (rigid, moldable, malleable, evolving), scheduling).
+#: Chosen to cover the hot paths: sync + async DMR checks, backfill,
+#: evolving phase churn, and the preemption channel.
+SCENARIOS: Tuple[Tuple[str, str, Tuple[float, float, float, float], str],
+                 ...] = (
+    ("easy_all_malleable_sync", "easy", (0.0, 0.0, 1.0, 0.0), "sync"),
+    ("sjf_mixed_sync", "sjf", (0.25, 0.15, 0.3, 0.3), "sync"),
+    ("malleable_async", "malleable", (0.0, 0.0, 1.0, 0.0), "async"),
+    ("preempt_mixed_sync", "preempt", (0.2, 0.2, 0.6, 0.0), "sync"),
+)
+
+ROUND_DIGITS = 6
+
+
+def _synthetic_trace():
+    tests_dir = os.path.join(_REPO, "tests")
+    if tests_dir not in sys.path:
+        sys.path.insert(0, tests_dir)
+    import synthetic_swf
+    from repro.workload.swf import parse_swf
+    lines, _ = synthetic_swf.synthetic_swf(WORKLOAD["n_jobs"])
+    return parse_swf(lines)
+
+
+def _build_sim(trace, policy: str, mix, scheduling: str):
+    from repro.rms.scheduler import SchedulerConfig
+    from repro.rms.simulator import ClusterSimulator, SimConfig
+    from repro.workload.swf import MalleabilityMix, jobs_from_swf
+
+    jobs, apps = jobs_from_swf(
+        trace, num_nodes=WORKLOAD["num_nodes"], mix=MalleabilityMix(*mix),
+        seed=WORKLOAD["seed"], time_scale=WORKLOAD["time_scale"])
+    cfg = SimConfig(num_nodes=WORKLOAD["num_nodes"], flexible=True,
+                    scheduling=scheduling, seed=WORKLOAD["seed"],
+                    sched=SchedulerConfig(policy=policy))
+    return ClusterSimulator(jobs, cfg, apps=apps)
+
+
+def run_scenario(trace, policy: str, mix, scheduling: str, repeats: int
+                 ) -> Tuple[Dict[str, object], Dict[str, float]]:
+    """Returns ``(deterministic, timings)`` for one scenario.
+
+    The wall time is the best of ``repeats`` full replays (kernel-bench
+    style: the minimum is the least noisy location statistic for
+    wall-clock micro-measurements).
+    """
+    from repro.rms.job import JobState
+
+    best_wall = None
+    det: Dict[str, object] = {}
+    for _ in range(max(repeats, 1)):
+        sim = _build_sim(trace, policy, mix, scheduling)
+        t0 = time.perf_counter()
+        report = sim.run()
+        wall = time.perf_counter() - t0
+        det = {
+            "dispatched": sim.engine.dispatched,
+            "actions": len(report.actions),
+            "completed": sum(1 for j in report.jobs
+                             if j.state is JobState.COMPLETED),
+            "makespan_s": round(float(report.makespan), ROUND_DIGITS),
+        }
+        if best_wall is None or wall < best_wall:
+            best_wall = wall
+    timings = {"wall_s": round(best_wall, 6),
+               "events_per_sec": round(det["dispatched"] / best_wall, 1)}
+    return det, timings
+
+
+def run_bench(repeats: int = 3, verbose: bool = True
+              ) -> Tuple[Dict[str, object], Dict[str, object]]:
+    """Run every scenario; returns ``(deterministic, timings)`` blocks."""
+    trace = _synthetic_trace()
+    deterministic: Dict[str, object] = {}
+    timings: Dict[str, object] = {}
+    total_events, total_wall = 0, 0.0
+    if verbose:
+        print("# engine bench: synthetic corpus "
+              f"({WORKLOAD['n_jobs']} jobs, {len(SCENARIOS)} scenarios, "
+              f"best of {repeats})")
+        print("scenario,dispatched,actions,completed,makespan_s,"
+              "wall_s,events_per_sec")
+    for label, policy, mix, scheduling in SCENARIOS:
+        det, tim = run_scenario(trace, policy, mix, scheduling, repeats)
+        deterministic[label] = det
+        timings[label] = tim
+        total_events += det["dispatched"]
+        total_wall += tim["wall_s"]
+        if verbose:
+            print(f"{label},{det['dispatched']},{det['actions']},"
+                  f"{det['completed']},{det['makespan_s']},"
+                  f"{tim['wall_s']},{tim['events_per_sec']}")
+    deterministic["total_dispatched"] = total_events
+    timings["total_wall_s"] = round(total_wall, 6)
+    timings["events_per_sec"] = round(total_events / total_wall, 1)
+    if verbose:
+        print(f"total,{total_events},,,,{timings['total_wall_s']},"
+              f"{timings['events_per_sec']}")
+    return deterministic, timings
+
+
+# ---------------------------------------------------------------------------
+# Trajectory artifact
+# ---------------------------------------------------------------------------
+
+def load_trajectory(path: str) -> Dict[str, object]:
+    with open(path) as fh:
+        doc = json.load(fh)
+    if doc.get("schema") != SCHEMA_ID:
+        raise ValueError(f"not an engine-bench trajectory: "
+                         f"schema={doc.get('schema')!r}")
+    if doc.get("version") != SCHEMA_VERSION:
+        raise ValueError(f"engine-bench trajectory version "
+                         f"{doc.get('version')} != {SCHEMA_VERSION}")
+    if doc.get("workload") != WORKLOAD:
+        raise ValueError("engine-bench trajectory workload mismatch: "
+                         f"{doc.get('workload')} != {WORKLOAD} "
+                         "(the canonical parameters changed — start a "
+                         "fresh trajectory)")
+    return doc
+
+
+def dumps_trajectory(doc: Dict[str, object]) -> str:
+    return json.dumps(doc, sort_keys=True, indent=2) + "\n"
+
+
+def append_entry(path: str, label: str, deterministic: Dict[str, object],
+                 timings: Dict[str, object]) -> Dict[str, object]:
+    if os.path.exists(path):
+        doc = load_trajectory(path)
+    else:
+        doc = {"schema": SCHEMA_ID, "version": SCHEMA_VERSION,
+               "workload": dict(WORKLOAD), "entries": []}
+    doc["entries"].append({"label": label, "deterministic": deterministic,
+                           "timings": timings})
+    with open(path, "w") as fh:
+        fh.write(dumps_trajectory(doc))
+    return doc
+
+
+def check_against(path: str, deterministic: Dict[str, object]) -> List[str]:
+    """Compare a fresh run's deterministic block against the trajectory's
+    last entry; returns human-readable drift messages (empty: clean)."""
+    doc = load_trajectory(path)
+    if not doc["entries"]:
+        return [f"{path}: empty trajectory (no entries to check against)"]
+    want = doc["entries"][-1]["deterministic"]
+    drift = []
+    for key in sorted(set(want) | set(deterministic)):
+        if want.get(key) != deterministic.get(key):
+            drift.append(f"{key}: committed {want.get(key)!r} != "
+                         f"measured {deterministic.get(key)!r}")
+    return drift
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="full replays per scenario; wall time is the best")
+    ap.add_argument("--append", default=None, metavar="PATH",
+                    help="append this run as a new trajectory entry")
+    ap.add_argument("--label", default="dev",
+                    help="entry label used with --append")
+    ap.add_argument("--check", default=None, metavar="PATH",
+                    help="fail (exit 1) if deterministic fields drift from "
+                         "the trajectory's last entry")
+    args = ap.parse_args(argv)
+
+    deterministic, timings = run_bench(repeats=args.repeats)
+    if args.append:
+        append_entry(args.append, args.label, deterministic, timings)
+        print(f"# appended entry {args.label!r} to {args.append}")
+    if args.check:
+        drift = check_against(args.check, deterministic)
+        if drift:
+            print(f"# DRIFT against {args.check} (deterministic fields "
+                  f"changed — regenerate only for intentional semantics "
+                  f"changes):")
+            for line in drift:
+                print(f"#   {line}")
+            return 1
+        print(f"# deterministic fields match {args.check}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -27,7 +27,8 @@ DEFAULT_MIXES = "1:0:0:0,0.2:0.2:0.6:0,0:0:1:0,0.2:0.1:0.4:0.3,0:0:0.3:0.7"
 
 def run_zoo(trace: str, *, num_nodes: int = 64, workers: int = 0,
             mixes=None, seed: int = 7, metric: str = "makespan_s"):
-    """Returns (rows, winners): sweep rows + per-mix winning policy."""
+    """Returns (rows, winners): sweep rows + winning policy keyed by
+    ``(trace, rigid, moldable, malleable, evolving)``."""
     mixes = mixes or parse_mixes(DEFAULT_MIXES)
     policies = sorted(POLICY_REGISTRY)
     points = build_grid([trace], policies, mixes, (True,),
@@ -60,19 +61,22 @@ def main(argv=None):
     for line in csv_lines(rows):
         print(line)
 
-    by_mix = {}
+    # Winner keys carry the trace (a multi-trace zoo has one table per
+    # trace — keying by mix alone used to collapse them into one).
+    by_key = {}
     for row in rows:
-        by_mix.setdefault((row["rigid"], row["moldable"], row["malleable"],
-                           row["evolving"]), []).append(row)
-    print(f"\n# winner per mix (lowest {args.metric}):")
-    print(f"{'rigid':>6} {'mold':>6} {'mall':>6} {'evol':>6}  "
+        by_key.setdefault((row["trace"], row["rigid"], row["moldable"],
+                           row["malleable"], row["evolving"]), []).append(row)
+    print(f"\n# winner per trace x mix (lowest {args.metric}):")
+    print(f"{'trace':<20} {'rigid':>6} {'mold':>6} {'mall':>6} {'evol':>6}  "
           f"{'winner':<12} " + " ".join(f"{p:>12}" for p in policies))
-    for mix in sorted(by_mix):
-        vals = {r["policy"]: float(r[args.metric]) for r in by_mix[mix]}
+    for key in sorted(by_key):
+        trace, rigid, mold, mall, evol = key
+        vals = {r["policy"]: float(r[args.metric]) for r in by_key[key]}
         cells = " ".join(f"{vals.get(p, float('nan')):12.0f}"
                          for p in policies)
-        print(f"{mix[0]:6.2f} {mix[1]:6.2f} {mix[2]:6.2f} {mix[3]:6.2f}  "
-              f"{winners[mix]:<12} {cells}")
+        print(f"{trace:<20} {rigid:6.2f} {mold:6.2f} {mall:6.2f} "
+              f"{evol:6.2f}  {winners[key]:<12} {cells}")
 
     if args.artifact:
         grid = {"traces": [os.path.basename(args.trace)],

@@ -36,6 +36,8 @@ class Cluster:
 
     def job_rate_factor(self, job_id: int) -> float:
         """min over owned nodes of 1/slowdown — a straggler gates the job."""
+        if not self.slow:
+            return 1.0            # hot path: no stragglers anywhere
         nodes = self.owned.get(job_id, ())
         if not nodes:
             return 1.0

@@ -39,6 +39,11 @@ Determinism contract: events are dispatched in ``(t, seq)`` order where
 ``seq`` is the scheduling sequence number, so two runs that schedule the
 same events in the same order replay identically (tier-1 golden-trace test
 ``tests/test_engine_determinism.py`` locks this down).
+
+Hot-path notes: event dataclasses are ``slots=True`` (a simulation
+allocates one per scheduled event — millions in a big sweep) and the
+dispatcher resolves each event type's handler chain once, caching the
+MRO walk, instead of re-walking it on every dispatch.
 """
 from __future__ import annotations
 
@@ -52,59 +57,59 @@ from typing import Callable, Dict, List, Optional, Tuple, Type
 # Typed events
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class Event:
     """Base event: ``t`` is the simulation time the event fires at."""
     t: float
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class JobSubmit(Event):
     job_id: int
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class JobFinish(Event):
     job_id: int
     version: int          # invalidates stale completions after a resize
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class ReconfigPoint(Event):
     job_id: int
     epoch: int = 0        # invalidates a chain left over from a prior start
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class ExpandTimeout(Event):
     job_id: int
     since: float          # identifies which pending wait this timeout guards
     epoch: int = 0        # invalidated structurally when the job requeues
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class NodeFail(Event):
     node: int
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class StragglerOnset(Event):
     node: int
     slowdown: float
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class StragglerScan(Event):
     job_id: int
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class CheckpointTick(Event):
     job_id: int
     epoch: int = 0        # invalidates a chain left over from a prior start
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class PhaseChange(Event):
     """An EVOLVING job enters phase ``phase`` and demands a new band.
 
@@ -141,6 +146,10 @@ class SimulationEngine:
         self._heap: List[Tuple[float, int, Event]] = []
         self._seq = itertools.count()
         self._handlers: Dict[Type[Event], List[Handler]] = {}
+        # Per concrete event type: the flattened handler chain (own type
+        # first, then base types up the MRO).  Rebuilt lazily after every
+        # registration — dispatch never walks the MRO itself.
+        self._chain: Dict[Type[Event], Tuple[Handler, ...]] = {}
         self.dispatched = 0
 
     # -- registration --------------------------------------------------------
@@ -153,7 +162,18 @@ class SimulationEngine:
                 return fn
             return deco
         self._handlers.setdefault(event_type, []).append(handler)
+        self._chain.clear()    # chains are stale once registrations change
         return handler
+
+    def _build_chain(self, event_type: Type[Event]) -> Tuple[Handler, ...]:
+        chain: List[Handler] = []
+        for klass in event_type.__mro__:
+            if klass is object:
+                break
+            chain.extend(self._handlers.get(klass, ()))
+        out = tuple(chain)
+        self._chain[event_type] = out
+        return out
 
     # -- scheduling ----------------------------------------------------------
 
@@ -166,11 +186,12 @@ class SimulationEngine:
     # -- main loop -----------------------------------------------------------
 
     def _dispatch(self, event: Event) -> None:
-        for klass in type(event).__mro__:
-            if klass is object:
-                break
-            for handler in self._handlers.get(klass, ()):
-                handler(event)
+        cls = type(event)
+        chain = self._chain.get(cls)
+        if chain is None:
+            chain = self._build_chain(cls)
+        for handler in chain:
+            handler(event)
 
     def step(self) -> bool:
         """Dispatch the next event; returns False when the heap is empty."""
@@ -185,5 +206,28 @@ class SimulationEngine:
         return True
 
     def run(self) -> None:
-        while self.step():
-            pass
+        # Tight inlining of step(): the loop body runs once per event, so
+        # attribute lookups are hoisted out of it.  ``self._chain`` is
+        # aliased, not copied — a handler registering new handlers mid-run
+        # clears the same dict, so stale chains cannot be reused.
+        heap = self._heap
+        pop = heapq.heappop
+        chains = self._chain
+        dispatched = self.dispatched
+        max_events = self.max_events
+        try:
+            while heap:
+                t, _, event = pop(heap)
+                self.now = t
+                dispatched += 1
+                if dispatched > max_events:
+                    raise RuntimeError(
+                        "simulation runaway: max_events exceeded")
+                cls = type(event)
+                chain = chains.get(cls)
+                if chain is None:
+                    chain = self._build_chain(cls)
+                for handler in chain:
+                    handler(event)
+        finally:
+            self.dispatched = dispatched

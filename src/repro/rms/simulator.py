@@ -131,6 +131,24 @@ class ClusterSimulator:
         self.actions: List[ActionRecord] = []
         self.timeline: List[Tuple[float, int, int, int]] = []
         self._by_id = {j.job_id: j for j in jobs}
+        # Hot-path job-set tracking: the scheduler pass and every DMR check
+        # need "pending jobs submitted by now" and "running jobs"; scanning
+        # the whole workload per event is O(jobs) each time (quadratic over
+        # a trace replay).  Instead the sets are maintained incrementally
+        # at the three state-transition sites (start / requeue / complete)
+        # plus a submit-time pointer, and materialized in ``self.jobs``
+        # order so every consumer sees exactly the order the full scan
+        # produced (byte-identical golden traces).
+        self._pos = {j.job_id: i for i, j in enumerate(jobs)}
+        self._by_submit = sorted(jobs, key=lambda j: j.submit_time)
+        self._submit_idx = 0
+        self._pending_map: Dict[int, Job] = {}
+        self._running_map: Dict[int, Job] = {}
+        # Amdahl rates are pure in (app, nodes, serial_frac) — memoized so
+        # runtime estimates (hottest call in backfill passes) stop
+        # recomputing the same division chain.
+        self._rate_memo: Dict[Tuple[str, int, Optional[float]], float] = {}
+        self._est_memo: Dict[int, Tuple[Tuple, float]] = {}
         self._completed = 0
         self._waiting_expands: List[dict] = []   # async stale-grant waits
         self._pending_async: Dict[int, Tuple[Decision, float]] = {}
@@ -181,8 +199,18 @@ class ClusterSimulator:
             return ph.data_bytes
         return self._app(job).data_bytes
 
+    def _app_rate(self, job: Job, nodes: int) -> float:
+        """Memoized ``AppModel.rate`` — pure in (app, nodes, serial_frac)."""
+        sf = self._serial_frac(job)
+        key = (job.app, nodes, sf)
+        r = self._rate_memo.get(key)
+        if r is None:
+            r = self._app(job).rate(nodes, sf)
+            self._rate_memo[key] = r
+        return r
+
     def _rate(self, job: Job) -> float:
-        return (self._app(job).rate(job.nodes, self._serial_frac(job))
+        return (self._app_rate(job, job.nodes)
                 * self.cluster.job_rate_factor(job.job_id))
 
     def _advance(self, job: Job):
@@ -230,27 +258,65 @@ class ClusterSimulator:
             nxt.preferred, epoch))
 
     def _snapshot(self):
-        running = sum(1 for j in self.jobs if j.state is JobState.RUNNING)
+        running = sum(1 for j in self._running_map.values()
+                      if j.state is JobState.RUNNING)
         self.timeline.append((self.now, self.cluster.allocated_nodes,
                               running, self._completed))
 
     def _pending_jobs(self) -> List[Job]:
-        return [j for j in self.jobs if j.state is JobState.PENDING
-                and j.submit_time <= self.now]
+        """Pending jobs submitted by ``now``, in workload order.
+
+        Incremental: newly-reachable submissions are folded in by
+        advancing a pointer over the submit-time-sorted workload (a job
+        with ``submit_time == now`` is visible even before its JobSubmit
+        event dispatches, exactly like the full scan this replaces), and
+        started jobs were already removed at their transition.
+        """
+        bys = self._by_submit
+        i, n, now = self._submit_idx, len(bys), self.now
+        while i < n and bys[i].submit_time <= now:
+            j = bys[i]
+            if j.state is JobState.PENDING:
+                self._pending_map[j.job_id] = j
+            i += 1
+        self._submit_idx = i
+        out = [j for j in self._pending_map.values()
+               if j.state is JobState.PENDING]
+        if len(out) != len(self._pending_map):    # externally mutated job
+            self._pending_map = {j.job_id: j for j in out}
+        out.sort(key=lambda j: self._pos[j.job_id])
+        return out
+
+    def _running_jobs(self) -> List[Job]:
+        """Running jobs in workload order (see :meth:`_pending_jobs`)."""
+        out = [j for j in self._running_map.values()
+               if j.state is JobState.RUNNING]
+        if len(out) != len(self._running_map):    # externally mutated job
+            self._running_map = {j.job_id: j for j in out}
+        out.sort(key=lambda j: self._pos[j.job_id])
+        return out
 
     def _runtime_estimate(self, job: Job) -> float:
-        app = self._app(job)
+        # Memoized on the exact state the estimate depends on: work_done
+        # only moves at _advance calls, so between events the same value
+        # is requested hundreds of times by backfill priority sorts.
+        key = (job.work_done, job.nodes, job.requested_nodes,
+               job.phase_index)
+        hit = self._est_memo.get(job.job_id)
+        if hit is not None and hit[0] == key:
+            return hit[1]
         nodes = job.nodes or job.requested_nodes
         remaining = max(job.work - job.work_done, 0.0)
-        return remaining / app.rate(nodes, self._serial_frac(job))
+        est = remaining / self._app_rate(job, nodes)
+        self._est_memo[job.job_id] = (key, est)
+        return est
 
     # -- scheduling ------------------------------------------------------------
 
     def _scheduler_pass(self):
         self._grant_waiting_expands()
         starts = self.scheduler.schedule(
-            self._pending_jobs(),
-            [j for j in self.jobs if j.state is JobState.RUNNING],
+            self._pending_jobs(), self._running_jobs(),
             self.now, self._runtime_estimate)
         # Preemption directives (preempt policy) free capacity the returned
         # starts already count on, so they are applied first.
@@ -261,6 +327,8 @@ class ClusterSimulator:
             self.cluster.allocate(job.job_id, n)
             job.nodes = n
             job.state = JobState.RUNNING
+            self._pending_map.pop(job.job_id, None)
+            self._running_map[job.job_id] = job
             job.start_time = self.now
             job.priority_boost = 0.0
             job.last_progress_t = self.now + self.config.launch_latency_s
@@ -337,6 +405,8 @@ class ClusterSimulator:
         self.cluster.release(job.job_id)
         job.state = JobState.PENDING
         job.nodes = 0
+        self._running_map.pop(job.job_id, None)
+        self._pending_map[job.job_id] = job
         job.completion_version += 1
         self._pending_async.pop(job.job_id, None)  # decision is stale now
         self._drop_waiting_expands(job.job_id)     # RJ wait is stale too
@@ -462,10 +532,13 @@ class ClusterSimulator:
             if self.cluster.allocation(rj_id) >= delta:
                 self.cluster.release(rj_id)     # hand the nodes to the job
                 waited = self.now - w["since"]
+                # _apply reschedules completion itself (the grant always
+                # takes the resize path: the released reservation covers
+                # the delta, so the stale-grant branch can't trigger) —
+                # rescheduling again here bumped completion_version twice
+                # and left a dead JobFinish in the heap per granted expand.
                 self._apply(job, decision, w["decide_s"], waited_s=waited,
                             pause_decide=False)
-                job.paused_until = max(job.paused_until, self.now)
-                self._schedule_completion(job)
             else:
                 still.append(w)
         self._waiting_expands = still
@@ -532,6 +605,7 @@ class ClusterSimulator:
         job.end_time = self.now
         job.record_nodes(self.now)
         self.cluster.release(job.job_id)
+        self._running_map.pop(job.job_id, None)
         self._completed += 1
         self._pending_async.pop(job.job_id, None)
         self._snapshot()

@@ -36,16 +36,28 @@ The same row schema is shared by ``benchmarks/trace_replay.py``,
 ``benchmarks/table4_throughput.py`` (via :func:`report_row`) and
 ``benchmarks/policy_zoo.py``.
 
+Long grids are *resumable*: ``--journal path.jsonl`` appends every
+completed row durably as it finishes (:mod:`repro.rms.journal`),
+``--resume`` skips journaled points (validating each against the grid
+point's fingerprint), and ``--shard i/N`` deterministically partitions
+the grid for multi-host chunking.  Because rows are re-sorted by
+:func:`row_key` before serialization, a kill-resume-merge artifact is
+byte-identical to a fresh serial run — the golden determinism contract
+extends to journals (``tests/test_journal.py``).
+
 CLI (the CI smoke step runs the ``--smoke`` grid with two workers)::
 
     PYTHONPATH=src python -m repro.rms.sweep --trace tests/data/sample.swf \\
         --policies easy,sjf --mixes 0:0:1,0.5:0.25:0.25 --workers 2 \\
-        --out sweep.json [--check tests/data/golden_sweep.json] [--smoke]
+        --out sweep.json [--check tests/data/golden_sweep.json] [--smoke] \\
+        [--journal sweep.jsonl [--resume]] [--shard 0/4]
 """
 from __future__ import annotations
 
 import argparse
+import csv
 import dataclasses
+import io
 import json
 import multiprocessing
 import os
@@ -223,17 +235,134 @@ def row_key(row: Dict[str, object]) -> Tuple:
             row.get("calibration_id", PAPER_FIT_ID))
 
 
-def run_sweep(points: Sequence[SweepPoint], *, workers: int = 0
-              ) -> List[Dict[str, object]]:
+# Calibration artifacts are read once per path, not once per grid point:
+# point keys/fingerprints need the content-hash id before any simulation
+# runs, so resume can decide what to skip without touching the simulator.
+_calibration_ids: Dict[str, str] = {}
+
+
+def _calibration_id(path: Optional[str]) -> str:
+    if not path:
+        return PAPER_FIT_ID
+    cached = _calibration_ids.get(path)
+    if cached is None:
+        from repro.calib.artifact import load_calibration
+        cached = str(load_calibration(path)["calibration_id"])
+        _calibration_ids[path] = cached
+    return cached
+
+
+def point_journal_key(point: SweepPoint) -> str:
+    """The journal key for a grid point — the same tuple :func:`row_key`
+    derives from the *finished* row, computed up front from the point so a
+    resume can skip it without running anything.  JSON-encoded so it is a
+    stable, hashable JSONL dict key."""
+    m = norm_mix(point.mix)
+    return json.dumps((point.label, point.policy,
+                       round(m[0], ROUND_DIGITS), round(m[1], ROUND_DIGITS),
+                       round(m[2], ROUND_DIGITS), round(m[3], ROUND_DIGITS),
+                       not point.flexible, point.scheduling,
+                       point.num_nodes, point.seed,
+                       round(point.time_scale, ROUND_DIGITS),
+                       _calibration_id(point.calibration)))
+
+
+def point_fingerprint(point: SweepPoint) -> Dict[str, object]:
+    """Full deterministic identity of a grid point — a superset of the key
+    (``max_jobs`` changes results but is not a row column), recorded with
+    each journal entry and verified on resume so a journal written under a
+    different grid fails loudly instead of serving wrong rows."""
+    m = norm_mix(point.mix)
+    return {"trace": point.label, "policy": point.policy,
+            "mix": [round(x, ROUND_DIGITS) for x in m],
+            "flexible": bool(point.flexible),
+            "num_nodes": point.num_nodes, "seed": point.seed,
+            "scheduling": point.scheduling,
+            "time_scale": round(point.time_scale, ROUND_DIGITS),
+            "max_jobs": point.max_jobs,
+            "calibration_id": _calibration_id(point.calibration)}
+
+
+def _run_indexed(item: Tuple[int, SweepPoint]) -> Tuple[int, Dict[str, object]]:
+    """Pool worker for the journaled path: ``imap_unordered`` streams rows
+    back as they complete, and the index ties each row to its journal key."""
+    idx, point = item
+    return idx, run_point(point)
+
+
+def run_sweep(points: Sequence[SweepPoint], *, workers: int = 0,
+              journal: Optional[str] = None,
+              resume_from: Sequence[str] = ()) -> List[Dict[str, object]]:
     """Run the grid; ``workers <= 1`` is serial, else a spawn-context pool
-    (spawn: safe after JAX/XLA initialization in the parent)."""
+    (spawn: safe after JAX/XLA initialization in the parent).
+
+    With ``journal`` set, every completed row is durably appended to that
+    JSONL file the moment it finishes (kill-safe; see
+    :mod:`repro.rms.journal`).  With ``resume_from`` journals, points whose
+    key is already journaled are *not* re-run — their rows are reused after
+    a fingerprint check.  Either way the returned rows are sorted by
+    :func:`row_key`, so the artifact is byte-identical to a fresh serial
+    run of the same grid.
+    """
     points = list(points)
-    if workers <= 1 or len(points) <= 1:
-        rows = [run_point(p) for p in points]
-    else:
-        ctx = multiprocessing.get_context("spawn")
-        with ctx.Pool(min(workers, len(points))) as pool:
-            rows = pool.map(run_point, points)
+    resume_paths = [p for p in resume_from if p]
+    if journal is None and not resume_paths:
+        # Fast path — unchanged from the pre-journal driver.
+        if workers <= 1 or len(points) <= 1:
+            rows = [run_point(p) for p in points]
+        else:
+            ctx = multiprocessing.get_context("spawn")
+            with ctx.Pool(min(workers, len(points))) as pool:
+                rows = pool.map(run_point, points)
+        return sorted(rows, key=row_key)
+
+    from repro.rms.journal import GridJournal, JournalMismatch
+
+    keyed = [(point_journal_key(p), point_fingerprint(p), p) for p in points]
+    seen: Dict[str, Dict[str, object]] = {}
+    for key, fp, _ in keyed:
+        if key in seen and seen[key] != fp:
+            raise ValueError(
+                f"grid points collide on journal key {key}: same row "
+                f"identity, different fingerprints ({seen[key]!r} vs "
+                f"{fp!r}) — the journal cannot tell them apart")
+        seen[key] = fp
+
+    done = GridJournal.load_many(resume_paths)
+    rows: List[Dict[str, object]] = []
+    todo: List[Tuple[str, Dict[str, object], SweepPoint]] = []
+    for key, fp, point in keyed:
+        entry = done.get(key)
+        if entry is None:
+            todo.append((key, fp, point))
+            continue
+        recorded = entry.get("point")
+        if recorded is not None and recorded != fp:
+            raise JournalMismatch(
+                f"journal entry {key} was produced by a different grid "
+                f"point: recorded {recorded!r}, expected {fp!r}")
+        rows.append(dict(entry["row"]))
+
+    writer = GridJournal(journal) if journal else None
+    try:
+        if workers <= 1 or len(todo) <= 1:
+            for key, fp, point in todo:
+                row = run_point(point)
+                if writer is not None:
+                    writer.append(key, row, fp)
+                rows.append(row)
+        elif todo:
+            ctx = multiprocessing.get_context("spawn")
+            with ctx.Pool(min(workers, len(todo))) as pool:
+                items = [(i, point) for i, (_, _, point) in enumerate(todo)]
+                for idx, row in pool.imap_unordered(_run_indexed, items):
+                    key, fp, _ = todo[idx]
+                    if writer is not None:
+                        writer.append(key, row, fp)
+                    rows.append(row)
+    finally:
+        if writer is not None:
+            writer.close()
     return sorted(rows, key=row_key)
 
 
@@ -293,10 +422,21 @@ def load_artifact(path: str) -> Dict[str, object]:
     return doc
 
 
+def _csv_line(values) -> str:
+    buf = io.StringIO()
+    csv.writer(buf, lineterminator="").writerow(list(values))
+    return buf.getvalue()
+
+
 def csv_lines(rows: Sequence[Dict[str, object]]) -> List[str]:
-    lines = [",".join(COLUMNS)]
+    """One CSV line per row under csv-module (RFC 4180) quoting: a trace
+    name carrying a comma, quote, or newline round-trips through
+    ``csv.reader`` instead of silently shifting every later column.
+    Values without special characters serialize exactly as ``str(value)``
+    did before, so normal-grid artifacts stay byte-identical."""
+    lines = [_csv_line(COLUMNS)]
     for row in rows:
-        lines.append(",".join(str(row.get(c, "")) for c in COLUMNS))
+        lines.append(_csv_line(str(row.get(c, "")) for c in COLUMNS))
     return lines
 
 
@@ -307,16 +447,21 @@ def write_csv(path: str, rows: Sequence[Dict[str, object]]) -> None:
 
 def winners_by_mix(rows: Sequence[Dict[str, object]],
                    metric: str = "makespan_s") -> Dict[Tuple, str]:
-    """Per (rigid, moldable, malleable, evolving) mix: the policy minimizing
-    ``metric`` (ties broken by policy name for determinism)."""
+    """Per ``(trace, rigid, moldable, malleable, evolving)``: the policy
+    minimizing ``metric`` (ties broken by policy name for determinism).
+
+    The key must include the trace: keying by mix alone collapsed a
+    multi-trace sweep into one winner table, silently crowning whichever
+    trace happened to produce the global minimum ``metric`` for the mix.
+    """
     best: Dict[Tuple, Tuple[float, str]] = {}
     for row in rows:
-        mix = (row["rigid"], row["moldable"], row["malleable"],
-               row.get("evolving", 0.0))
+        key = (str(row.get("trace", "")), row["rigid"], row["moldable"],
+               row["malleable"], row.get("evolving", 0.0))
         cand = (float(row[metric]), str(row["policy"]))
-        if mix not in best or cand < best[mix]:
-            best[mix] = cand
-    return {mix: policy for mix, (_, policy) in best.items()}
+        if key not in best or cand < best[key]:
+            best[key] = cand
+    return {key: policy for key, (_, policy) in best.items()}
 
 
 # ---------------------------------------------------------------------------
@@ -369,6 +514,19 @@ def main(argv=None) -> int:
                     help="repro.calib artifact path: simulate under its "
                          "fitted cost model (rows record its id)")
     ap.add_argument("--workers", type=int, default=0)
+    ap.add_argument("--journal", action="append", default=None,
+                    metavar="PATH",
+                    help="append completed rows to this JSONL journal as "
+                         "they finish (kill-safe); repeatable — the first "
+                         "path is the write target, and with --resume ALL "
+                         "listed journals are read (shard merge)")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip grid points already completed in the "
+                         "--journal files (fingerprint-checked)")
+    ap.add_argument("--shard", default=None, metavar="I/N",
+                    help="run only grid points I, I+N, I+2N, ... of the "
+                         "deterministic build order; merge shard journals "
+                         "later with --resume")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny fixed grid (the golden-artifact grid)")
     ap.add_argument("--out", default=None, help="write JSON artifact here")
@@ -377,6 +535,15 @@ def main(argv=None) -> int:
                     help="golden JSON artifact to byte-compare against "
                          "(exit 1 on mismatch)")
     args = ap.parse_args(argv)
+    if args.resume and not args.journal:
+        ap.error("--resume needs at least one --journal to read")
+    shard = None
+    if args.shard:
+        from repro.rms.journal import parse_shard
+        try:
+            shard = parse_shard(args.shard)
+        except ValueError as exc:
+            ap.error(str(exc))
 
     traces = args.trace or [os.path.normpath(default_trace)]
     if args.smoke:
@@ -403,7 +570,17 @@ def main(argv=None) -> int:
                 "policies": policies, "mixes": [list(m) for m in mixes],
                 "flexibles": list(flexibles), "num_nodes": args.nodes,
                 "seed": args.seed, "calibration_id": calibration_id}
-    rows = run_sweep(points, workers=args.workers)
+    if shard is not None:
+        # A shard artifact covers a subset of the grid and says so; the
+        # merge run (--resume over all shard journals, no --shard) has no
+        # "shard" key, so its bytes match a fresh serial full-grid run.
+        points = points[shard[0]::shard[1]]
+        grid = dict(grid)
+        grid["shard"] = shard
+    journal_path = args.journal[0] if args.journal else None
+    resume_from = tuple(args.journal) if args.resume else ()
+    rows = run_sweep(points, workers=args.workers, journal=journal_path,
+                     resume_from=resume_from)
     doc = artifact(rows, grid)
     for line in csv_lines(rows):
         print(line)

@@ -1,0 +1,235 @@
+"""Resumable-sweep journal: kill-safety, resume, and shard determinism.
+
+Extends the golden determinism contract to journals: an artifact built
+from any combination of kills, resumes, and shard merges must be
+byte-identical to a fresh serial run of the same grid.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.rms import sweep
+from repro.rms.journal import GridJournal, JournalMismatch, parse_shard
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+TRACE = os.path.join(DATA, "sample.swf")
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def smoke_points():
+    points, grid = sweep.smoke_grid(TRACE)
+    return points, grid
+
+
+def artifact_bytes(rows, grid):
+    return sweep.dumps_artifact(sweep.artifact(rows, grid))
+
+
+# ---------------------------------------------------------------------------
+# GridJournal primitives
+# ---------------------------------------------------------------------------
+
+def test_journal_append_load_round_trip(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    with GridJournal(path) as j:
+        j.append("k1", {"a": 1}, {"fp": "x"})
+        j.append("k2", {"a": 2})
+    entries = GridJournal.load(path)
+    assert set(entries) == {"k1", "k2"}
+    assert entries["k1"]["row"] == {"a": 1}
+    assert entries["k1"]["point"] == {"fp": "x"}
+    assert "point" not in entries["k2"]
+
+
+def test_journal_missing_file_is_empty(tmp_path):
+    assert GridJournal.load(str(tmp_path / "nope.jsonl")) == {}
+
+
+def test_journal_tolerates_truncated_tail(tmp_path):
+    """A kill can cut the last line mid-write; earlier entries survive and
+    the cut point simply re-runs on resume."""
+    path = str(tmp_path / "j.jsonl")
+    with GridJournal(path) as j:
+        j.append("k1", {"a": 1})
+        j.append("k2", {"a": 2})
+    with open(path, "rb") as fh:
+        blob = fh.read()
+    cut = blob[:-9]                       # chop into the final JSON line
+    assert not cut.endswith(b"\n")
+    with open(path, "wb") as fh:
+        fh.write(cut)
+    entries = GridJournal.load(path)
+    assert set(entries) == {"k1"}
+    # ... and appending after the truncation still loads: the writer
+    # terminates the partial line on reopen, so it stays isolated (and
+    # skipped) instead of swallowing the next entry
+    with GridJournal(path) as j:
+        j.append("k3", {"a": 3})
+    entries = GridJournal.load(path)
+    assert "k1" in entries and "k3" in entries
+
+
+def test_journal_duplicate_key_last_wins(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    with GridJournal(path) as j:
+        j.append("k", {"a": 1})
+        j.append("k", {"a": 2})
+    assert GridJournal.load(path)["k"]["row"] == {"a": 2}
+
+
+def test_journal_rejects_foreign_header(tmp_path):
+    path = tmp_path / "alien.jsonl"
+    path.write_text(json.dumps({"journal": "other.schema", "version": 1})
+                    + "\n")
+    with pytest.raises(JournalMismatch, match="not a sweep journal"):
+        GridJournal.load(str(path))
+
+
+def test_parse_shard():
+    assert parse_shard("0/2") == [0, 2]
+    assert parse_shard("3/4") == [3, 4]
+    for bad in ("2/2", "-1/2", "0/0", "1", "a/b"):
+        with pytest.raises(ValueError):
+            parse_shard(bad)
+
+
+# ---------------------------------------------------------------------------
+# Resume semantics
+# ---------------------------------------------------------------------------
+
+def test_resume_skips_journaled_points(tmp_path, monkeypatch):
+    """A resumed sweep re-runs only the missing points and still returns
+    the full, canonically sorted row set."""
+    points, grid = smoke_points()
+    jpath = str(tmp_path / "j.jsonl")
+    fresh = sweep.run_sweep(points)
+
+    ran = []
+    real = sweep.run_point
+
+    def counting(point):
+        ran.append(point)
+        return real(point)
+
+    monkeypatch.setattr(sweep, "run_point", counting)
+    partial = sweep.run_sweep(points[:4], journal=jpath)
+    assert len(ran) == 4 and len(partial) == 4
+
+    ran.clear()
+    resumed = sweep.run_sweep(points, journal=jpath, resume_from=(jpath,))
+    assert len(ran) == len(points) - 4        # journaled points not re-run
+    assert artifact_bytes(resumed, grid) == artifact_bytes(fresh, grid)
+
+    ran.clear()                               # second resume: fully cached
+    again = sweep.run_sweep(points, resume_from=(jpath,))
+    assert ran == []
+    assert artifact_bytes(again, grid) == artifact_bytes(fresh, grid)
+
+
+def test_resume_rejects_fingerprint_mismatch(tmp_path):
+    """A journal written under a different grid (same row key, different
+    max_jobs) must fail loudly, not serve wrong rows."""
+    points, _ = smoke_points()
+    jpath = str(tmp_path / "j.jsonl")
+    sweep.run_sweep(points[:1], journal=jpath)
+    import dataclasses
+    altered = dataclasses.replace(points[0], max_jobs=3)
+    assert sweep.point_journal_key(altered) == \
+        sweep.point_journal_key(points[0])    # key alone cannot tell
+    with pytest.raises(JournalMismatch, match="different grid point"):
+        sweep.run_sweep([altered], resume_from=(jpath,))
+
+
+def test_colliding_grid_points_rejected(tmp_path):
+    points, _ = smoke_points()
+    import dataclasses
+    twin = dataclasses.replace(points[0], max_jobs=3)
+    with pytest.raises(ValueError, match="collide"):
+        sweep.run_sweep([points[0], twin],
+                        journal=str(tmp_path / "j.jsonl"))
+
+
+def test_point_key_matches_row_key():
+    """The key computed from a point up front must equal the row_key of
+    the row that point produces — that equality is what lets resume skip
+    without running."""
+    points, _ = smoke_points()
+    point = points[0]
+    row = sweep.run_point(point)
+    assert sweep.point_journal_key(point) == \
+        json.dumps(sweep.row_key(row))
+
+
+# ---------------------------------------------------------------------------
+# Shard partitioning
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [2, 3, 5])
+def test_shard_union_equals_full_grid(n_shards):
+    """Shards are disjoint and their union is the full grid, whatever N."""
+    points, _ = smoke_points()
+    shards = [points[i::n_shards] for i in range(n_shards)]
+    keys = [sweep.point_journal_key(p) for p in points]
+    shard_keys = [[sweep.point_journal_key(p) for p in s] for s in shards]
+    flat = [k for ks in shard_keys for k in ks]
+    assert sorted(flat) == sorted(keys)
+    assert len(set(flat)) == len(flat)
+
+
+def test_shard_journals_merge_to_serial_bytes(tmp_path):
+    """Run each shard with its own journal, merge via resume: artifact
+    bytes equal the fresh serial run's."""
+    points, grid = smoke_points()
+    fresh = sweep.run_sweep(points)
+    jpaths = []
+    for i in range(2):
+        jpath = str(tmp_path / f"shard{i}.jsonl")
+        jpaths.append(jpath)
+        sweep.run_sweep(points[i::2], journal=jpath)
+    merged = sweep.run_sweep(points, resume_from=jpaths)
+    assert artifact_bytes(merged, grid) == artifact_bytes(fresh, grid)
+
+
+# ---------------------------------------------------------------------------
+# Kill -> resume through the real CLI
+# ---------------------------------------------------------------------------
+
+def _sweep_cli(tmp, *extra):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.rms.sweep", "--trace", TRACE,
+         "--smoke", *extra],
+        cwd=str(tmp), env=env,
+        stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+
+
+def test_cli_kill_resume_byte_identical(tmp_path):
+    """The acceptance lock: SIGKILL a journaled sweep mid-grid, resume it,
+    and the final artifact byte-matches a fresh serial run."""
+    serial = tmp_path / "serial.json"
+    proc = _sweep_cli(tmp_path, "--out", str(serial))
+    assert proc.wait(timeout=300) == 0
+
+    jpath = tmp_path / "run.jsonl"
+    proc = _sweep_cli(tmp_path, "--journal", str(jpath))
+    deadline = time.monotonic() + 300
+    while time.monotonic() < deadline:       # wait for >=1 durable row
+        if jpath.exists() and len(GridJournal.load(str(jpath))) >= 1:
+            break
+        if proc.poll() is not None:
+            break                            # finished before we killed it
+        time.sleep(0.02)
+    if proc.poll() is None:
+        proc.send_signal(signal.SIGKILL)
+        proc.wait(timeout=60)
+
+    resumed = tmp_path / "resumed.json"
+    proc = _sweep_cli(tmp_path, "--journal", str(jpath), "--resume",
+                      "--out", str(resumed))
+    assert proc.wait(timeout=300) == 0
+    assert resumed.read_bytes() == serial.read_bytes()

@@ -141,3 +141,88 @@ def test_deterministic_given_seed():
     b = run(30, True)
     assert a.makespan == b.makespan
     assert len(a.actions) == len(b.actions)
+
+
+# ---------------------------------------------------------------------------
+# Event churn: a granted async expand schedules completion exactly once
+# ---------------------------------------------------------------------------
+
+def _grant_scenario():
+    """A grower whose async expand must wait on a rigid wall job: the wall
+    finishing hands its nodes to the resizer-job reservation, so the wait
+    is *granted* (not timed out) mid-run."""
+    from repro.rms.costmodel import AppModel
+    from repro.rms.job import Job
+
+    apps = {
+        "grow": AppModel("grow", iterations=600, t1_iter_s=2.0,
+                         serial_frac=0.0, data_bytes=1 << 20, min_nodes=2,
+                         max_nodes=8, preferred=8, check_period_s=5.0),
+        "wall": AppModel("wall", iterations=100, t1_iter_s=6.0,
+                         serial_frac=0.0, data_bytes=0, min_nodes=6,
+                         max_nodes=6, preferred=None, check_period_s=0.0),
+    }
+    grower = Job(job_id=0, app="grow", submit_time=0.0, work=600.0,
+                 min_nodes=2, max_nodes=8, preferred=8, malleable=True,
+                 check_period_s=5.0, requested_nodes=2, data_bytes=1 << 20)
+    wall = Job(job_id=1, app="wall", submit_time=8.0, work=100.0,
+               min_nodes=6, max_nodes=6, preferred=None, malleable=False,
+               requested_nodes=6)
+    cfg = SimConfig(num_nodes=8, flexible=True, scheduling="async",
+                    checkpoint_period_s=0.0, expand_timeout_s=500.0)
+    return ClusterSimulator([grower, wall], cfg, apps=apps), grower
+
+
+def test_granted_expand_schedules_completion_exactly_once():
+    """Regression (event churn): _grant_waiting_expands used to call
+    _schedule_completion right after _apply — which had already
+    rescheduled completion — so every granted expand bumped
+    completion_version twice and left a dead JobFinish in the heap."""
+    from repro.rms.engine import JobFinish, JobSubmit
+
+    sim, grower = _grant_scenario()
+    for j in sim.jobs:
+        sim.engine.schedule(JobSubmit(j.submit_time, j.job_id))
+    guard = 0
+    while not sim._waiting_expands:            # reach the pending wait
+        assert sim.engine.step(), "never reached a waiting expand"
+        guard += 1
+        assert guard < 10_000
+    version_waiting = grower.completion_version
+    while sim._waiting_expands:                # ... and its grant
+        assert sim.engine.step(), "wait never granted"
+        guard += 1
+        assert guard < 10_000
+    granted = [a for a in sim.actions if a.action == "expand"
+               and not a.timed_out and a.apply_s > 0]
+    assert granted, "scenario no longer exercises the granted-expand path"
+    # exactly one completion (re)schedule for the grant ...
+    assert grower.completion_version == version_waiting + 1
+    # ... so the heap holds one JobFinish per version ever scheduled (the
+    # pre-grant event is inherently dead — a resize invalidates, it cannot
+    # unschedule) and exactly one carries the live version.  Pre-fix the
+    # double reschedule left an *extra* dead finish per granted expand.
+    finishes = [ev for (_, _, ev) in sim.engine._heap
+                if isinstance(ev, JobFinish) and ev.job_id == grower.job_id]
+    assert len(finishes) == grower.completion_version
+    assert sum(1 for ev in finishes
+               if ev.version == grower.completion_version) == 1
+    sim.engine.run()
+    assert all(j.state is JobState.COMPLETED for j in sim.jobs)
+
+
+def test_granted_expand_trace_and_makespan_deterministic():
+    """The churn fix must not change semantics: two fresh replays of the
+    grant scenario produce identical action traces and makespans, and the
+    engine dispatches no more events than scheduled completions require."""
+    reports = []
+    dispatched = []
+    for _ in range(2):
+        sim, _ = _grant_scenario()
+        reports.append(sim.run())
+        dispatched.append(sim.engine.dispatched)
+    a, b = reports
+    assert a.makespan == b.makespan
+    assert [dataclasses.astuple(x) for x in a.actions] == \
+        [dataclasses.astuple(x) for x in b.actions]
+    assert dispatched[0] == dispatched[1]

@@ -97,19 +97,59 @@ def test_load_artifact_round_trip_and_rejections(tmp_path):
 
 def test_winners_by_mix_deterministic_tiebreak():
     rows = [
-        {"rigid": 0.0, "moldable": 0.0, "malleable": 1.0, "evolving": 0.0,
-         "policy": "b", "makespan_s": 100.0},
-        {"rigid": 0.0, "moldable": 0.0, "malleable": 1.0, "evolving": 0.0,
-         "policy": "a", "makespan_s": 100.0},
-        {"rigid": 1.0, "moldable": 0.0, "malleable": 0.0, "evolving": 0.0,
-         "policy": "c", "makespan_s": 50.0},
+        {"trace": "t.swf", "rigid": 0.0, "moldable": 0.0, "malleable": 1.0,
+         "evolving": 0.0, "policy": "b", "makespan_s": 100.0},
+        {"trace": "t.swf", "rigid": 0.0, "moldable": 0.0, "malleable": 1.0,
+         "evolving": 0.0, "policy": "a", "makespan_s": 100.0},
+        {"trace": "t.swf", "rigid": 1.0, "moldable": 0.0, "malleable": 0.0,
+         "evolving": 0.0, "policy": "c", "makespan_s": 50.0},
         # a v1 row (no evolving key) lands in the zero-evolving bucket
-        {"rigid": 1.0, "moldable": 0.0, "malleable": 0.0,
+        {"trace": "t.swf", "rigid": 1.0, "moldable": 0.0, "malleable": 0.0,
          "policy": "b", "makespan_s": 40.0},
     ]
     winners = sweep.winners_by_mix(rows)
-    assert winners[(0.0, 0.0, 1.0, 0.0)] == "a"  # tie -> lexicographic
-    assert winners[(1.0, 0.0, 0.0, 0.0)] == "b"
+    assert winners[("t.swf", 0.0, 0.0, 1.0, 0.0)] == "a"  # tie -> lexical
+    assert winners[("t.swf", 1.0, 0.0, 0.0, 0.0)] == "b"
+
+
+def test_winners_by_mix_keyed_per_trace():
+    """Regression: keying by mix alone collapsed a multi-trace sweep into
+    one winner table — the trace with the globally smallest metric won
+    every mix.  Each trace must get its own winner."""
+    mix = {"rigid": 0.0, "moldable": 0.0, "malleable": 1.0, "evolving": 0.0}
+    rows = [
+        dict(mix, trace="small.swf", policy="easy", makespan_s=10.0),
+        dict(mix, trace="small.swf", policy="sjf", makespan_s=20.0),
+        dict(mix, trace="big.swf", policy="easy", makespan_s=900.0),
+        dict(mix, trace="big.swf", policy="sjf", makespan_s=800.0),
+    ]
+    winners = sweep.winners_by_mix(rows)
+    assert winners[("small.swf", 0.0, 0.0, 1.0, 0.0)] == "easy"
+    # pre-fix this bucket did not exist: big.swf's rows lost to small.swf's
+    # globally smaller makespans and the table crowned "easy" for all
+    assert winners[("big.swf", 0.0, 0.0, 1.0, 0.0)] == "sjf"
+    assert len(winners) == 2
+
+
+def test_csv_lines_quote_hostile_trace_names():
+    """Regression: csv_lines joined raw ``str(value)`` on commas, so a
+    trace name containing a comma shifted every later column.  Under
+    csv-module quoting the hostile name must round-trip exactly."""
+    import csv as csv_mod
+    import io
+
+    doc = json.loads(golden_bytes())
+    row = dict(doc["results"][0])
+    hostile = 'evil, "trace"\nname.swf'
+    row["trace"] = hostile
+    lines = sweep.csv_lines([row])
+    parsed = list(csv_mod.reader(io.StringIO("\n".join(lines))))
+    assert parsed[0] == list(sweep.COLUMNS)
+    rec = parsed[1]
+    assert len(rec) == len(sweep.COLUMNS)
+    assert rec[sweep.COLUMNS.index("trace")] == hostile
+    assert rec[sweep.COLUMNS.index("policy")] == str(row["policy"])
+    assert rec[sweep.COLUMNS.index("makespan_s")] == str(row["makespan_s"])
 
 
 def test_smoke_grid_includes_evolving_mix():
