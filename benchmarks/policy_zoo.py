@@ -6,10 +6,15 @@ rigid/moldable/malleable/evolving mixes via the parallel sweep driver
 mix — the Chadha/Zojer-style policy-grid study the ROADMAP "policy zoo"
 item asks for, now including evolving-heavy workloads (§2 EVOLVING).
 
+Winner tables report two objective axes per policy: the winning metric
+(makespan by default) *and* node-hours — on an elastic cluster (--churn)
+a policy that finishes marginally later while letting the power manager
+park more capacity can be the cheaper choice.
+
   PYTHONPATH=src python benchmarks/policy_zoo.py \\
       [--trace tests/data/sample.swf] [--nodes 64] [--workers 4] \\
       [--mixes 1:0:0:0,0.2:0.2:0.6:0,0.2:0.1:0.4:0.3] \\
-      [--metric makespan_s] [--artifact zoo.json]
+      [--metric makespan_s] [--churn smoke] [--artifact zoo.json]
 """
 from __future__ import annotations
 
@@ -17,6 +22,7 @@ import argparse
 import os
 
 from repro.rms import POLICY_REGISTRY
+from repro.rms.capacity import CHURN_SCENARIOS
 from repro.rms.sweep import (artifact, build_grid, csv_lines, parse_mixes,
                              run_sweep, winners_by_mix, write_artifact)
 
@@ -26,13 +32,14 @@ DEFAULT_MIXES = "1:0:0:0,0.2:0.2:0.6:0,0:0:1:0,0.2:0.1:0.4:0.3,0:0:0.3:0.7"
 
 
 def run_zoo(trace: str, *, num_nodes: int = 64, workers: int = 0,
-            mixes=None, seed: int = 7, metric: str = "makespan_s"):
+            mixes=None, seed: int = 7, metric: str = "makespan_s",
+            churn=None):
     """Returns (rows, winners): sweep rows + winning policy keyed by
     ``(trace, rigid, moldable, malleable, evolving)``."""
     mixes = mixes or parse_mixes(DEFAULT_MIXES)
     policies = sorted(POLICY_REGISTRY)
     points = build_grid([trace], policies, mixes, (True,),
-                        num_nodes=num_nodes, seed=seed)
+                        num_nodes=num_nodes, seed=seed, churn=churn)
     rows = run_sweep(points, workers=workers)
     return rows, winners_by_mix(rows, metric=metric)
 
@@ -46,6 +53,11 @@ def main(argv=None):
     ap.add_argument("--mixes", default=DEFAULT_MIXES)
     ap.add_argument("--metric", default="makespan_s",
                     help="winner criterion (any numeric row column)")
+    ap.add_argument("--churn", default=None,
+                    choices=sorted(CHURN_SCENARIOS),
+                    help="run the zoo on an elastic cluster: named "
+                         "capacity-churn scenario (drains/joins + power "
+                         "management)")
     ap.add_argument("--artifact", default=None,
                     help="write the versioned JSON artifact here")
     args = ap.parse_args(argv)
@@ -54,10 +66,12 @@ def main(argv=None):
     policies = sorted(POLICY_REGISTRY)
     print(f"# policy zoo: {os.path.basename(args.trace)}, "
           f"{len(policies)} policies x {len(mixes)} mixes "
-          f"({args.workers or 1} workers)")
+          f"({args.workers or 1} workers"
+          + (f", churn={args.churn}" if args.churn else "") + ")")
     rows, winners = run_zoo(args.trace, num_nodes=args.nodes,
                             workers=args.workers, mixes=mixes,
-                            seed=args.seed, metric=args.metric)
+                            seed=args.seed, metric=args.metric,
+                            churn=args.churn)
     for line in csv_lines(rows):
         print(line)
 
@@ -67,14 +81,18 @@ def main(argv=None):
     for row in rows:
         by_key.setdefault((row["trace"], row["rigid"], row["moldable"],
                            row["malleable"], row["evolving"]), []).append(row)
-    print(f"\n# winner per trace x mix (lowest {args.metric}):")
+    print(f"\n# winner per trace x mix (lowest {args.metric}; "
+          f"cells are {args.metric}/node_hours):")
     print(f"{'trace':<20} {'rigid':>6} {'mold':>6} {'mall':>6} {'evol':>6}  "
-          f"{'winner':<12} " + " ".join(f"{p:>12}" for p in policies))
+          f"{'winner':<12} " + " ".join(f"{p:>16}" for p in policies))
     for key in sorted(by_key):
         trace, rigid, mold, mall, evol = key
-        vals = {r["policy"]: float(r[args.metric]) for r in by_key[key]}
-        cells = " ".join(f"{vals.get(p, float('nan')):12.0f}"
-                         for p in policies)
+        vals = {r["policy"]: (float(r[args.metric]),
+                              float(r.get("node_hours", 0.0)))
+                for r in by_key[key]}
+        cells = " ".join(
+            f"{vals[p][0]:9.0f}/{vals[p][1]:6.0f}" if p in vals
+            else f"{'-':>16}" for p in policies)
         print(f"{trace:<20} {rigid:6.2f} {mold:6.2f} {mall:6.2f} "
               f"{evol:6.2f}  {winners[key]:<12} {cells}")
 
@@ -83,6 +101,8 @@ def main(argv=None):
                 "policies": policies, "mixes": [list(m) for m in mixes],
                 "flexibles": [True], "num_nodes": args.nodes,
                 "seed": args.seed}
+        if args.churn:
+            grid["churn"] = args.churn
         write_artifact(args.artifact, artifact(rows, grid))
         print(f"# wrote {args.artifact} ({len(rows)} rows)")
     return rows, winners

@@ -1,8 +1,11 @@
 """RMS: Slurm-analogue resource manager (cluster, policy, scheduler, sim)."""
+from repro.rms.capacity import (CHURN_SCENARIOS, CapacityConfig,
+                                CapacityManager, churn_schedule, plan_drain)
 from repro.rms.cluster import Cluster
 from repro.rms.costmodel import PAPER_APPS, AppModel, ReconfigCostModel, lm_app_model
 from repro.rms.engine import (CheckpointTick, Event, ExpandTimeout, JobFinish,
-                              JobSubmit, NodeFail, PhaseChange,
+                              JobSubmit, NodeDrain, NodeFail, NodeJoin,
+                              NodePowerOff, NodePowerOn, PhaseChange,
                               ReconfigPoint, SimulationEngine,
                               StragglerOnset, StragglerScan)
 from repro.rms.job import Job, JobPhase, JobState
@@ -25,4 +28,7 @@ __all__ = ["Cluster", "PAPER_APPS", "AppModel", "ReconfigCostModel",
            "ClusterSimulator", "SimConfig", "SimReport",
            "SimulationEngine", "Event", "JobSubmit", "JobFinish",
            "ReconfigPoint", "ExpandTimeout", "NodeFail", "PhaseChange",
-           "StragglerOnset", "StragglerScan", "CheckpointTick"]
+           "StragglerOnset", "StragglerScan", "CheckpointTick",
+           "NodeJoin", "NodeDrain", "NodePowerOff", "NodePowerOn",
+           "CapacityConfig", "CapacityManager", "CHURN_SCENARIOS",
+           "churn_schedule", "plan_drain"]

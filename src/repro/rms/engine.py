@@ -28,6 +28,19 @@ Event              Paper section
 ``NodeFail``       beyond-paper fault path: shrink-to-survivors for
                    malleable jobs, checkpoint requeue for rigid ones (§8's
                    deployment argument).
+``NodeJoin``       beyond-paper elastic capacity: a node enters the pool
+                   (scale-out, maintenance done, spot granted) — waiting
+                   expands and queued jobs can claim it immediately.
+``NodeDrain``      beyond-paper elastic capacity: a node must leave the
+                   pool (maintenance, spot reclamation); the RMS negotiates
+                   the owning job off it — slice migration, DMR shrink, or
+                   checkpoint requeue — before release.
+``NodePowerOff``   beyond-paper energy management (CLUES-style): the
+                   capacity manager's armed idle timer fires; idle nodes
+                   above the ``min_free`` headroom are parked.
+``NodePowerOn``    beyond-paper energy management: a parked node finishes
+                   booting (``power_up_delay_s`` after queue pressure
+                   demanded it) and rejoins the allocatable pool.
 ``StragglerOnset`` beyond-paper: a node slows down; gates the whole job.
 ``StragglerScan``  beyond-paper: periodic detection + slice migration
                    (mechanically the §5.2.2 shrink data-fold on one slice).
@@ -90,6 +103,32 @@ class ExpandTimeout(Event):
 @dataclasses.dataclass(frozen=True, slots=True)
 class NodeFail(Event):
     node: int
+
+
+@dataclasses.dataclass(frozen=True, slots=True)
+class NodeJoin(Event):
+    """A node joins the pool; ``node < 0`` joins brand-new capacity under a
+    fresh id, a known id re-joins after a drain (or repaired after death)."""
+    node: int = -1
+
+
+@dataclasses.dataclass(frozen=True, slots=True)
+class NodeDrain(Event):
+    """``node`` must leave the pool (maintenance / spot reclamation)."""
+    node: int
+
+
+@dataclasses.dataclass(frozen=True, slots=True)
+class NodePowerOff(Event):
+    """The capacity manager's idle timer: ``node < 0`` lets the manager
+    pick which idle nodes to park (quarantined slow nodes first)."""
+    node: int = -1
+
+
+@dataclasses.dataclass(frozen=True, slots=True)
+class NodePowerOn(Event):
+    """A parked node finishes booting and becomes allocatable."""
+    node: int = -1
 
 
 @dataclasses.dataclass(frozen=True, slots=True)

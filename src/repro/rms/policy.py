@@ -86,8 +86,11 @@ class ReconfigPolicy:
         free = cluster.free_nodes
         pending = [j for j in pending
                    if j.state is JobState.PENDING and j.resizer_for is None]
-        lo = max(1, minimum)
-        hi = max(lo, maximum)
+        # negotiate over the band the *live* cluster can host: after a
+        # drain/failure the app-declared band may exceed real capacity
+        live = max(cluster.live_capacity, 1)
+        lo = max(1, min(minimum, live))
+        hi = max(lo, min(maximum, live))
 
         # ---- mode 1: request an action (§4.1) ------------------------------
         if minimum > cur:

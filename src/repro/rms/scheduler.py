@@ -141,7 +141,9 @@ class SchedulingPolicy:
         if job.priority_boost:
             return job.priority_boost
         age = now - job.submit_time
-        size = 1.0 - job.requested_nodes / max(self.cluster.num_nodes, 1)
+        # normalize by *live* capacity so the size bias tracks the cluster
+        # that actually exists after failures/drains/joins
+        size = 1.0 - job.requested_nodes / max(self.cluster.live_capacity, 1)
         return (self.config.age_weight * age
                 + self.config.size_weight * size)
 
@@ -469,7 +471,7 @@ class FairSharePolicy(EasyBackfillPolicy):
     def priority(self, job: Job, now: float) -> float:
         if job.priority_boost:
             return job.priority_boost
-        cap = max(self.cluster.num_nodes, 1) * \
+        cap = max(self.cluster.live_capacity, 1) * \
             max(self.config.fairshare_halflife_s, 1.0)
         return (super().priority(job, now)
                 - self.config.fairshare_weight * self.usage(job.user) / cap)
@@ -587,10 +589,15 @@ class MoldableStartPolicy(EasyBackfillPolicy):
     # -- the optimizer -------------------------------------------------------
 
     @staticmethod
-    def candidate_sizes(job: Job) -> List[int]:
-        """Powers of two within the job's [min_nodes, max_nodes]."""
+    def candidate_sizes(job: Job, cap: Optional[int] = None) -> List[int]:
+        """Powers of two within the job's [min_nodes, max_nodes].
+
+        ``cap`` (the cluster's live capacity) tightens the ceiling so the
+        optimizer never weighs sizes the surviving cluster cannot host.
+        """
+        hi = job.max_nodes if cap is None else min(job.max_nodes, cap)
         sizes, p = [], 1
-        while p <= job.max_nodes:
+        while p <= hi:
             if p >= max(job.min_nodes, 1):
                 sizes.append(p)
             p *= 2
@@ -613,7 +620,8 @@ class MoldableStartPolicy(EasyBackfillPolicy):
     def best_start(self, job: Job, free: int,
                    runtime_estimate: RuntimeEstimate) -> Optional[int]:
         """Best power-of-two start size fitting ``free`` (None: none fits)."""
-        cands = [s for s in self.candidate_sizes(job) if s <= free]
+        cands = [s for s in self.candidate_sizes(
+            job, self.cluster.live_capacity) if s <= free]
         if not cands:
             return None
         base = max(runtime_estimate(job), 0.0)
@@ -639,7 +647,8 @@ class MoldableStartPolicy(EasyBackfillPolicy):
 
     def _reservation_need(self, head: Job) -> int:
         # Reserve at the smallest size the head could ever start with.
-        return min(self.candidate_sizes(head) or [head.requested_nodes])
+        return min(self.candidate_sizes(head, self.cluster.live_capacity)
+                   or [head.requested_nodes])
 
     def _est_end(self, job: Job, size: int, now: float,
                  runtime_estimate: RuntimeEstimate) -> float:

@@ -31,10 +31,12 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.actions import Action, Decision
+from repro.rms.capacity import CapacityConfig, CapacityManager, plan_drain
 from repro.rms.cluster import Cluster
 from repro.rms.costmodel import PAPER_APPS, AppModel, ReconfigCostModel
 from repro.rms.engine import (CheckpointTick, ExpandTimeout, JobFinish,
-                              JobSubmit, NodeFail, PhaseChange,
+                              JobSubmit, NodeDrain, NodeFail, NodeJoin,
+                              NodePowerOff, NodePowerOn, PhaseChange,
                               ReconfigPoint, SimulationEngine,
                               StragglerOnset, StragglerScan)
 from repro.rms.job import Job, JobState, clamp_band
@@ -59,6 +61,11 @@ class SimConfig:
         default_factory=ReconfigCostModel)
     failures: Tuple[Tuple[float, int], ...] = ()          # (time, node)
     stragglers: Tuple[Tuple[float, int, float], ...] = () # (time, node, slow)
+    # elastic capacity: scheduled churn + CLUES-style power management
+    capacity: CapacityConfig = dataclasses.field(
+        default_factory=CapacityConfig)
+    drains: Tuple[Tuple[float, int], ...] = ()            # (time, node)
+    joins: Tuple[Tuple[float, int], ...] = ()             # (time, node|-1)
 
 
 @dataclasses.dataclass
@@ -84,11 +91,21 @@ class SimReport:
     wall_time_s: float
     # real measured in-process policy latencies (seconds), for Table 2
     policy_wall_s: List[float] = dataclasses.field(default_factory=list)
+    # capacity step function: (t, live_capacity, powered_off) — recorded at
+    # every capacity-changing event (fail/drain/join/power cycle)
+    capacity_timeline: List[Tuple[float, int, int]] = \
+        dataclasses.field(default_factory=list)
 
     # -- aggregate measures (paper definitions) -----------------------------
 
     def utilization(self, sample_s: float = 10.0) -> Tuple[float, float]:
-        """Time-sampled allocated-node fraction: (avg %, std %)."""
+        """Time-sampled allocated-node fraction: (avg %, std %).
+
+        Each sample is normalized by the *live* capacity at that instant
+        (the capacity step function), not the construction-time
+        ``config.num_nodes`` — after a failure or drain the old stale
+        denominator under-reported utilization of the surviving cluster.
+        """
         if not self.timeline:
             return 0.0, 0.0
         ts = np.array([e[0] for e in self.timeline])
@@ -96,8 +113,40 @@ class SimReport:
         t_end = self.makespan if self.makespan > 0 else ts[-1]
         grid = np.arange(0.0, max(t_end, sample_s), sample_s)
         idx = np.clip(np.searchsorted(ts, grid, side="right") - 1, 0, None)
-        samples = alloc[idx] / self.config.num_nodes * 100.0
+        if self.capacity_timeline:
+            cts = np.array([e[0] for e in self.capacity_timeline])
+            live = np.array([e[1] for e in self.capacity_timeline],
+                            dtype=float)
+            cidx = np.clip(np.searchsorted(cts, grid, side="right") - 1,
+                           0, None)
+            denom = np.maximum(live[cidx], 1.0)
+        else:
+            denom = float(max(self.config.num_nodes, 1))
+        samples = alloc[idx] / denom * 100.0
         return float(samples.mean()), float(samples.std())
+
+    def _capacity_integral(self, col: int) -> float:
+        """Integrate a capacity_timeline column over [0, makespan] (h)."""
+        t_end = self.makespan
+        if t_end <= 0:
+            return 0.0
+        pts = self.capacity_timeline or [(0.0, self.config.num_nodes, 0)]
+        total = 0.0
+        for i, pt in enumerate(pts):
+            t0 = min(pt[0], t_end)
+            t1 = t_end if i + 1 == len(pts) else min(pts[i + 1][0], t_end)
+            if t1 > t0:
+                total += pt[col] * (t1 - t0)
+        return total / 3600.0
+
+    def node_hours(self) -> float:
+        """Live (powered, non-dead) node·hours over the run — the second
+        objective axis next to makespan: what the cluster *cost*."""
+        return self._capacity_integral(1)
+
+    def powered_off_hours(self) -> float:
+        """Node·hours spent parked by the power manager — energy saved."""
+        return self._capacity_integral(2)
 
     def job_metrics(self) -> Dict[int, Tuple[float, float, float]]:
         return {j.job_id: (j.wait_time, j.exec_time, j.completion_time)
@@ -128,8 +177,11 @@ class ClusterSimulator:
                                    cost=config.cost)
         self.rng = np.random.default_rng(config.seed)
         self.engine = SimulationEngine()
+        self.capacity = CapacityManager(self.cluster, self.engine,
+                                        config.capacity)
         self.actions: List[ActionRecord] = []
         self.timeline: List[Tuple[float, int, int, int]] = []
+        self.capacity_timeline: List[Tuple[float, int, int]] = []
         self._by_id = {j.job_id: j for j in jobs}
         # Hot-path job-set tracking: the scheduler pass and every DMR check
         # need "pending jobs submitted by now" and "running jobs"; scanning
@@ -178,6 +230,10 @@ class ClusterSimulator:
                                                 ev.epoch))
         e.on(PhaseChange, self._on_phase_change)
         e.on(NodeFail, lambda ev: self._on_failure(ev.node))
+        e.on(NodeJoin, lambda ev: self._on_node_join(ev.node))
+        e.on(NodeDrain, lambda ev: self._on_node_drain(ev.node))
+        e.on(NodePowerOff, lambda ev: self._on_power_off(ev.node))
+        e.on(NodePowerOn, lambda ev: self._on_power_on(ev.node))
         e.on(StragglerOnset,
              lambda ev: self._on_straggler(ev.node, ev.slowdown))
         e.on(StragglerScan, lambda ev: self._on_straggler_scan(ev.job_id))
@@ -262,6 +318,11 @@ class ClusterSimulator:
                       if j.state is JobState.RUNNING)
         self.timeline.append((self.now, self.cluster.allocated_nodes,
                               running, self._completed))
+
+    def _capacity_snapshot(self):
+        self.capacity_timeline.append(
+            (self.now, self.cluster.live_capacity,
+             len(self.cluster.powered_off)))
 
     def _pending_jobs(self) -> List[Job]:
         """Pending jobs submitted by ``now``, in workload order.
@@ -354,6 +415,15 @@ class ClusterSimulator:
                     epoch))
         if starts or preempted:
             self._snapshot()
+        # power management observes queue pressure after every pass; unmet
+        # waiting-expand deltas count as demand (a starving RJ can boot a
+        # parked node, §5.2.1 meets CLUES)
+        if self.config.capacity.enabled:
+            extra = sum(
+                max(w["decision"].new_slices - w["job"].nodes
+                    - self.cluster.allocation(-(w["job"].job_id + 1)), 0)
+                for w in self._waiting_expands)
+            self.capacity.note_pass(self._pending_jobs(), self.now, extra)
 
     def _drop_waiting_expands(self, job_id: int) -> bool:
         """Structurally void a job's pending expand waits: remove the wait
@@ -376,8 +446,11 @@ class ClusterSimulator:
         rewrite the job's band (clamped to the cluster) and keep the
         restart size inside it."""
         job.phase_index = phase_idx
+        # clamp to *live* capacity: after a failure/drain the old
+        # ``config.num_nodes`` ceiling let a phase band exceed the real
+        # cluster and blow up in ``allocate`` (over-allocation RuntimeError)
         lo, hi, pref = clamp_band(min_nodes, max_nodes, preferred,
-                                  self.config.num_nodes)
+                                  max(self.cluster.live_capacity, 1))
         job.min_nodes, job.max_nodes, job.preferred = lo, hi, pref
         job.requested_nodes = min(max(job.requested_nodes, lo), hi)
 
@@ -683,10 +756,19 @@ class ClusterSimulator:
             self.engine.schedule(ReconfigPoint(self.now, job.job_id, repoch))
 
     def _on_failure(self, node: int):
+        # ``fail_node`` is idempotent and live_capacity is derived from the
+        # pools, so a double-failed node costs exactly one node of capacity
+        # (the old ``cluster.num_nodes -= 1`` here charged it per event).
         owner = self.cluster.fail_node(node)
-        self.cluster.num_nodes -= 1
+        self._capacity_snapshot()
         if owner is None:
             self._snapshot()
+            return
+        if owner < 0:
+            # the node was held by an RJ reservation, not a job: the expand
+            # it was reserved for can no longer count on it
+            self._snapshot()
+            self._scheduler_pass()
             return
         job = self._by_id[owner]
         self._advance(job)
@@ -724,6 +806,115 @@ class ClusterSimulator:
             self._requeue(job, "failure_requeue", survivors + 1,
                           f"node{node}-failed")
         self._snapshot()
+        self._scheduler_pass()
+
+    # -- elastic capacity (beyond-paper: the pool itself is dynamic) -----------
+
+    def _on_node_join(self, node: int):
+        """A node enters the pool (scale-out / maintenance done / repaired).
+
+        Freed capacity is offered immediately: waiting resizer jobs grant
+        first (max priority, §5.2.1), then queued jobs.
+        """
+        before = self.cluster.live_capacity
+        nid = self.cluster.join_node(node if node >= 0 else None)
+        after = self.cluster.live_capacity
+        if after == before:
+            return                      # already a live member: no-op
+        self.actions.append(ActionRecord(
+            self.now, -1, "node_join", 0.0, 0.0, before, after,
+            reason=f"node{nid}"))
+        self._capacity_snapshot()
+        self._scheduler_pass()
+
+    def _on_node_drain(self, node: int):
+        """A node must leave the pool; negotiate its owner off it first.
+
+        Idle nodes retire immediately.  For an owned node the RMS picks the
+        cheapest exit (:func:`repro.rms.capacity.plan_drain`): slice
+        migration to a healthy free node, a factor-consistent DMR shrink
+        (§5.2.2 fold), or a checkpoint requeue — then the vacated node is
+        routed to ``draining`` instead of back to ``free``.
+        """
+        before = self.cluster.live_capacity
+        owner = self.cluster.drain_node(node)
+        if owner is None:
+            if self.cluster.live_capacity != before:
+                self.actions.append(ActionRecord(
+                    self.now, -1, "node_drain", 0.0, 0.0, before,
+                    self.cluster.live_capacity, reason=f"node{node}-idle"))
+                self._capacity_snapshot()
+            return
+        if owner < 0:
+            # held by an RJ reservation: it retires when the reservation
+            # releases (grant or timeout) — nothing to negotiate with
+            return
+        job = self._by_id[owner]
+        self._advance(job)
+        min_floor = job.min_nodes if job.evolving else \
+            self._app(job).min_nodes
+        kind, new = plan_drain(self.cluster, job, node, min_floor)
+        if kind == "migrate":
+            self.cluster.replace_node(owner, node)
+            migrate_s = self.config.cost.resize_time(
+                job.nodes, max(job.nodes // 2, 1),
+                self._data_bytes(job) // max(job.nodes, 1))
+            self._pause(job, migrate_s)
+            self.actions.append(ActionRecord(
+                self.now, owner, "drain_migrate", 0.0, migrate_s,
+                job.nodes, job.nodes, reason=f"node{node}-drain"))
+            self._schedule_completion(job)
+        elif kind == "shrink":
+            old = job.nodes
+            self.cluster.move_to_tail(owner, node)   # fold sender = tail
+            self.cluster.resize(owner, new)
+            resize_s = self.config.cost.resize_time(
+                old, new, self._data_bytes(job))
+            self._pause(job, resize_s)
+            job.nodes = new
+            job.record_nodes(self.now)
+            self._ckpt_work[job.job_id] = job.work_done
+            self.actions.append(ActionRecord(
+                self.now, owner, "drain_shrink", 0.0, resize_s, old, new,
+                reason=f"node{node}-drain"))
+            self._schedule_completion(job)
+        else:
+            self._requeue(job, "drain_requeue", job.nodes,
+                          f"node{node}-drain")
+        self.actions.append(ActionRecord(
+            self.now, -1, "node_drain", 0.0, 0.0, before,
+            self.cluster.live_capacity, reason=f"node{node}"))
+        self._capacity_snapshot()
+        self._snapshot()
+        self._scheduler_pass()
+
+    def _on_power_off(self, node: int):
+        """Park idle capacity: explicit node, or let the armed manager
+        timer pick (re-validated against queue pressure at fire time)."""
+        before = self.cluster.live_capacity
+        if node >= 0:
+            offs = [node] if self.cluster.power_off_node(node) else []
+        else:
+            offs = self.capacity.confirm_power_off(
+                self._pending_jobs(), self.now)
+        if not offs:
+            return
+        self.actions.append(ActionRecord(
+            self.now, -1, "power_off", 0.0, 0.0, before,
+            self.cluster.live_capacity,
+            reason=",".join(f"node{n}" for n in offs)))
+        self._capacity_snapshot()
+
+    def _on_power_on(self, node: int):
+        """A parked node finished booting: back into the pool, and offer
+        it to waiting expands / queued jobs immediately."""
+        before = self.cluster.live_capacity
+        if not self.capacity.confirm_power_on(node):
+            return
+        self.actions.append(ActionRecord(
+            self.now, -1, "power_on", 0.0, 0.0, before,
+            self.cluster.live_capacity, reason=f"node{node}"))
+        self._capacity_snapshot()
         self._scheduler_pass()
 
     def _on_straggler(self, node: int, slowdown: float):
@@ -765,10 +956,16 @@ class ClusterSimulator:
             self.engine.schedule(NodeFail(t, node))
         for t, node, slow in self.config.stragglers:
             self.engine.schedule(StragglerOnset(t, node, slow))
+        for t, node in self.config.drains:
+            self.engine.schedule(NodeDrain(t, node))
+        for t, node in self.config.joins:
+            self.engine.schedule(NodeJoin(t, node))
+        self._capacity_snapshot()       # t=0 anchor of the step function
         self.engine.run()
         makespan = max((j.end_time for j in self.jobs
                         if j.end_time > 0), default=0.0)
         rep = SimReport(self.config, self.jobs, self.actions, self.timeline,
-                        makespan, _time.perf_counter() - wall0)
+                        makespan, _time.perf_counter() - wall0,
+                        capacity_timeline=self.capacity_timeline)
         rep.policy_wall_s = list(self._wall_decide_s)
         return rep

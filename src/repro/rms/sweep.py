@@ -11,13 +11,20 @@ Artifact schema (``SCHEMA_ID``/``SCHEMA_VERSION``): a JSON object
 
 .. code-block:: json
 
-    {"schema": "repro.rms.sweep", "version": 3,
+    {"schema": "repro.rms.sweep", "version": 4,
      "grid": {"traces": [...], "policies": [...],
               "mixes": [[r,m,f,e], ...]},
      "results": [{"trace": ..., "policy": ..., "rigid": ...,
-                  "calibration_id": "paper-fit", ...}]}
+                  "calibration_id": "paper-fit", "churn": "", ...}]}
 
-Schema v3 (this version) adds the ``calibration_id`` provenance column:
+Schema v4 (this version) adds the elastic-capacity columns: ``churn``
+(the named :data:`repro.rms.capacity.CHURN_SCENARIOS` drain/join/power
+schedule the row ran under, ``""`` for a fixed cluster), ``node_hours``
+(integral of live capacity over the run — the cost axis next to
+makespan), ``powered_off_hours`` (node·hours parked by the power
+manager) and the capacity event counts ``drains`` / ``joins`` /
+``power_offs`` / ``power_ons``.
+Schema v3 added the ``calibration_id`` provenance column:
 which reconfiguration-cost calibration (:mod:`repro.calib` artifact) the
 row was simulated under — ``"paper-fit"`` for the hand-fit Table 2/Fig. 3
 constants.  A grid point carries the artifact path in
@@ -26,8 +33,9 @@ artifact's content-hash id, so results are machine-independent.
 Schema v2 widened malleability mixes to four fractions —
 ``(rigid, moldable, malleable, evolving)`` — and added the ``evolving``
 and ``phase_changes`` row columns.  Older artifacts load transparently:
-:func:`load_artifact` upgrades v1 and v2 in place (``evolving=0.0``,
-``phase_changes=0``, ``calibration_id="paper-fit"``).
+:func:`load_artifact` upgrades v1, v2 and v3 in place (``evolving=0.0``,
+``phase_changes=0``, ``calibration_id="paper-fit"``, ``churn=""`` with
+``node_hours`` back-computed from the fixed capacity × makespan).
 
 ``results`` rows carry only deterministic fields (no wall-clock times),
 floats rounded to :data:`ROUND_DIGITS` decimals, rows sorted by
@@ -66,16 +74,18 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.calib.artifact import PAPER_FIT_ID
 
 SCHEMA_ID = "repro.rms.sweep"
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 ROUND_DIGITS = 6
 
 #: Fixed CSV column order — the row schema, version ``SCHEMA_VERSION``.
 COLUMNS = ("trace", "policy", "rigid", "moldable", "malleable", "evolving",
            "flexible", "scheduling", "num_nodes", "seed", "time_scale",
-           "calibration_id", "jobs", "completed", "makespan_s",
+           "calibration_id", "churn", "jobs", "completed", "makespan_s",
            "util_avg_pct", "util_std_pct", "avg_wait_s", "avg_exec_s",
-           "avg_completion_s", "expands", "shrinks", "preempts", "requeues",
-           "timeouts", "phase_changes")
+           "avg_completion_s", "node_hours", "powered_off_hours",
+           "expands", "shrinks", "preempts", "requeues",
+           "timeouts", "phase_changes", "drains", "joins", "power_offs",
+           "power_ons")
 
 #: Default smoke grid (2 policies × 3 mixes) — also the golden-artifact grid.
 SMOKE_POLICIES = ("easy", "sjf")
@@ -115,6 +125,9 @@ class SweepPoint:
     # Path to a repro.calib calibration artifact; None => paper-fit
     # constants.  The artifact's calibration_id lands in the row.
     calibration: Optional[str] = None
+    # Named capacity-churn scenario (repro.rms.capacity.CHURN_SCENARIOS):
+    # scheduled drains/joins + power management; None/"" => fixed cluster.
+    churn: Optional[str] = None
 
     @property
     def label(self) -> str:
@@ -138,7 +151,8 @@ def build_grid(traces: Sequence[str], policies: Sequence[str],
 
 def _action_counts(actions) -> Dict[str, int]:
     out = {"expands": 0, "shrinks": 0, "preempts": 0, "requeues": 0,
-           "timeouts": 0, "phase_changes": 0}
+           "timeouts": 0, "phase_changes": 0, "drains": 0, "joins": 0,
+           "power_offs": 0, "power_ons": 0}
     for a in actions:
         if a.timed_out:
             out["timeouts"] += 1
@@ -152,6 +166,14 @@ def _action_counts(actions) -> Dict[str, int]:
             out["requeues"] += 1
         elif a.action == "phase_change":
             out["phase_changes"] += 1
+        elif a.action == "node_drain":
+            out["drains"] += 1
+        elif a.action == "node_join":
+            out["joins"] += 1
+        elif a.action == "power_off":
+            out["power_offs"] += 1
+        elif a.action == "power_on":
+            out["power_ons"] += 1
     return out
 
 
@@ -159,7 +181,8 @@ def report_row(report, *, trace: str, policy: str,
                mix: Sequence[float], flexible: bool,
                scheduling: str = "sync", seed: int = 7,
                time_scale: float = 1.0,
-               calibration_id: str = PAPER_FIT_ID) -> Dict[str, object]:
+               calibration_id: str = PAPER_FIT_ID,
+               churn: str = "") -> Dict[str, object]:
     """Serialize a :class:`~repro.rms.simulator.SimReport` into the shared
     row schema — deterministic fields only, floats rounded."""
     from repro.rms.job import JobState
@@ -178,7 +201,7 @@ def report_row(report, *, trace: str, policy: str,
         "flexible": bool(flexible), "scheduling": scheduling,
         "num_nodes": report.config.num_nodes, "seed": seed,
         "time_scale": round(time_scale, ROUND_DIGITS),
-        "calibration_id": calibration_id,
+        "calibration_id": calibration_id, "churn": churn or "",
         "jobs": len(report.jobs), "completed": completed,
         "makespan_s": round(float(report.makespan), ROUND_DIGITS),
         "util_avg_pct": round(float(util_avg), ROUND_DIGITS),
@@ -186,6 +209,9 @@ def report_row(report, *, trace: str, policy: str,
         "avg_wait_s": round(float(wait), ROUND_DIGITS),
         "avg_exec_s": round(float(exec_), ROUND_DIGITS),
         "avg_completion_s": round(float(comp), ROUND_DIGITS),
+        "node_hours": round(float(report.node_hours()), ROUND_DIGITS),
+        "powered_off_hours": round(float(report.powered_off_hours()),
+                                   ROUND_DIGITS),
     }
     row.update(_action_counts(report.actions))
     return row
@@ -205,9 +231,13 @@ def run_point(point: SweepPoint) -> Dict[str, object]:
     jobs, apps = jobs_from_swf(trace, num_nodes=point.num_nodes, mix=mix,
                                seed=point.seed, max_jobs=point.max_jobs,
                                time_scale=point.time_scale)
+    from repro.rms.capacity import churn_schedule
+
+    drains, joins, capacity = churn_schedule(point.churn, point.num_nodes)
     cfg = SimConfig(num_nodes=point.num_nodes, flexible=point.flexible,
                     scheduling=point.scheduling, seed=point.seed,
-                    sched=SchedulerConfig(policy=point.policy))
+                    sched=SchedulerConfig(policy=point.policy),
+                    capacity=capacity, drains=drains, joins=joins)
     calibration_id = PAPER_FIT_ID
     if point.calibration:
         cost = ReconfigCostModel.from_artifact(point.calibration)
@@ -218,7 +248,8 @@ def run_point(point: SweepPoint) -> Dict[str, object]:
                       mix=point.mix, flexible=point.flexible,
                       scheduling=point.scheduling, seed=point.seed,
                       time_scale=point.time_scale,
-                      calibration_id=calibration_id)
+                      calibration_id=calibration_id,
+                      churn=point.churn or "")
 
 
 # ---------------------------------------------------------------------------
@@ -232,7 +263,8 @@ def row_key(row: Dict[str, object]) -> Tuple:
             row["malleable"], row.get("evolving", 0.0),
             not row["flexible"], row["scheduling"],
             row["num_nodes"], row["seed"], row["time_scale"],
-            row.get("calibration_id", PAPER_FIT_ID))
+            row.get("calibration_id", PAPER_FIT_ID),
+            row.get("churn", ""))
 
 
 # Calibration artifacts are read once per path, not once per grid point:
@@ -264,7 +296,8 @@ def point_journal_key(point: SweepPoint) -> str:
                        not point.flexible, point.scheduling,
                        point.num_nodes, point.seed,
                        round(point.time_scale, ROUND_DIGITS),
-                       _calibration_id(point.calibration)))
+                       _calibration_id(point.calibration),
+                       point.churn or ""))
 
 
 def point_fingerprint(point: SweepPoint) -> Dict[str, object]:
@@ -280,7 +313,8 @@ def point_fingerprint(point: SweepPoint) -> Dict[str, object]:
             "scheduling": point.scheduling,
             "time_scale": round(point.time_scale, ROUND_DIGITS),
             "max_jobs": point.max_jobs,
-            "calibration_id": _calibration_id(point.calibration)}
+            "calibration_id": _calibration_id(point.calibration),
+            "churn": point.churn or ""}
 
 
 def _run_indexed(item: Tuple[int, SweepPoint]) -> Tuple[int, Dict[str, object]]:
@@ -400,6 +434,21 @@ def _upgrade_v2(doc: Dict[str, object]) -> Dict[str, object]:
     the hand-fit constants."""
     for row in doc.get("results", []):
         row.setdefault("calibration_id", PAPER_FIT_ID)
+    doc["version"] = 3
+    return doc
+
+
+def _upgrade_v3(doc: Dict[str, object]) -> Dict[str, object]:
+    """In-place v3 → v4: pre-elastic artifacts ran on a fixed cluster, so
+    their node-hour integral is exactly capacity × makespan, nothing was
+    ever parked, and no capacity events fired."""
+    for row in doc.get("results", []):
+        row.setdefault("churn", "")
+        row.setdefault("node_hours", round(
+            row["num_nodes"] * row["makespan_s"] / 3600.0, ROUND_DIGITS))
+        row.setdefault("powered_off_hours", 0.0)
+        for col in ("drains", "joins", "power_offs", "power_ons"):
+            row.setdefault(col, 0)
     doc["version"] = SCHEMA_VERSION
     return doc
 
@@ -415,6 +464,9 @@ def load_artifact(path: str) -> Dict[str, object]:
         version = doc["version"]
     if version == 2:
         doc = _upgrade_v2(doc)
+        version = doc["version"]
+    if version == 3:
+        doc = _upgrade_v3(doc)
         version = doc["version"]
     if version != SCHEMA_VERSION:
         raise ValueError(f"sweep artifact version {version} != "
@@ -468,17 +520,21 @@ def winners_by_mix(rows: Sequence[Dict[str, object]],
 # CLI
 # ---------------------------------------------------------------------------
 
-def smoke_grid(trace: str, *, num_nodes: int = 64, seed: int = 7
+def smoke_grid(trace: str, *, num_nodes: int = 64, seed: int = 7,
+               churn: Optional[str] = None
                ) -> Tuple[List[SweepPoint], Dict[str, object]]:
     """The tiny deterministic grid behind ``--smoke`` and the golden
-    artifact (``tests/data/golden_sweep.json``) — keep the two in sync by
+    artifacts (``tests/data/golden_sweep.json``; with ``churn="smoke"``,
+    ``tests/data/golden_capacity_sweep.json``) — keep the two in sync by
     construction."""
     points = build_grid([trace], SMOKE_POLICIES, SMOKE_MIXES, (True,),
-                        num_nodes=num_nodes, seed=seed)
+                        num_nodes=num_nodes, seed=seed, churn=churn)
     grid = {"traces": [os.path.basename(trace)],
             "policies": list(SMOKE_POLICIES),
             "mixes": [list(m) for m in SMOKE_MIXES],
             "flexibles": [True], "num_nodes": num_nodes, "seed": seed}
+    if churn:
+        grid["churn"] = churn
     return points, grid
 
 
@@ -513,6 +569,10 @@ def main(argv=None) -> int:
     ap.add_argument("--calibration", default=None,
                     help="repro.calib artifact path: simulate under its "
                          "fitted cost model (rows record its id)")
+    ap.add_argument("--churn", default=None,
+                    help="named capacity-churn scenario "
+                         "(repro.rms.capacity.CHURN_SCENARIOS): scheduled "
+                         "drains/joins + CLUES-style power management")
     ap.add_argument("--workers", type=int, default=0)
     ap.add_argument("--journal", action="append", default=None,
                     metavar="PATH",
@@ -546,12 +606,17 @@ def main(argv=None) -> int:
             ap.error(str(exc))
 
     traces = args.trace or [os.path.normpath(default_trace)]
+    if args.churn:
+        from repro.rms.capacity import CHURN_SCENARIOS
+        if args.churn not in CHURN_SCENARIOS:
+            ap.error(f"unknown churn scenario {args.churn!r}; "
+                     f"registered: {','.join(sorted(CHURN_SCENARIOS))}")
     if args.smoke:
         if args.calibration:
             ap.error("--smoke is the fixed paper-fit golden grid; "
                      "run a calibrated sweep without --smoke")
         points, grid = smoke_grid(traces[0], num_nodes=args.nodes,
-                                  seed=args.seed)
+                                  seed=args.seed, churn=args.churn)
     else:
         policies = [p.strip() for p in args.policies.split(",") if p.strip()]
         mixes = parse_mixes(args.mixes)
@@ -565,11 +630,14 @@ def main(argv=None) -> int:
                             num_nodes=args.nodes, seed=args.seed,
                             time_scale=args.time_scale,
                             max_jobs=args.max_jobs,
-                            calibration=args.calibration)
+                            calibration=args.calibration,
+                            churn=args.churn)
         grid = {"traces": [os.path.basename(t) for t in traces],
                 "policies": policies, "mixes": [list(m) for m in mixes],
                 "flexibles": list(flexibles), "num_nodes": args.nodes,
                 "seed": args.seed, "calibration_id": calibration_id}
+        if args.churn:
+            grid["churn"] = args.churn
     if shard is not None:
         # A shard artifact covers a subset of the grid and says so; the
         # merge run (--resume over all shard journals, no --shard) has no

@@ -1,0 +1,395 @@
+"""Elastic cluster capacity: lifecycle states, churn events, power manager.
+
+Pins the three pre-existing capacity bugs this subsystem replaced:
+
+1. double-fail double-count — ``_on_failure`` decremented
+   ``cluster.num_nodes`` on *every* NodeFail, so failing the same node
+   twice charged two nodes of capacity;
+2. stale denominators — ``SimReport.utilization()`` divided by
+   ``config.num_nodes`` and ``_apply_phase_band`` clamped phase bands to
+   ``config.num_nodes`` after failures/drains shrank the real cluster;
+3. straggler recycling — ``swap_straggler`` returned the known-slow node
+   to the head-allocatable free list, so the next allocate handed it
+   straight to a fresh job.
+
+Plus the new invariants: capacity conservation under any op interleaving,
+the deterministic capacity-churn golden trace (drain forces a DMR shrink
+/ migration, join grants a waiting expand), CLUES-style power-cycle
+hysteresis, and churn-sweep byte determinism.
+
+Regenerate the golden file (after an *intentional* semantic change) with:
+
+    PYTHONPATH=src:tests python -c \\
+        "import test_capacity as t; t.write_golden()"
+"""
+import json
+import os
+import random
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                              # container has no hypothesis
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.rms import (CapacityConfig, Cluster, Job, JobState,
+                       MoldableStartPolicy)
+from repro.rms.costmodel import AppModel
+from repro.rms.simulator import ClusterSimulator, SimConfig
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+GOLDEN = os.path.join(DATA, "golden_capacity_trace.json")
+
+
+# ---------------------------------------------------------------------------
+# Satellite bugfix 1: idempotent failure accounting
+# ---------------------------------------------------------------------------
+
+def _one_job(n=1, work=50.0, submit=0.0, job_id=0, malleable=False):
+    return Job(job_id=job_id, app="cg", submit_time=submit, work=work,
+               min_nodes=n, max_nodes=n, preferred=None,
+               malleable=malleable, requested_nodes=n)
+
+
+def test_double_fail_costs_one_node_of_capacity():
+    """Two NodeFail events on the same node must cost exactly one node —
+    the pre-fix handler charged ``num_nodes -= 1`` once per event."""
+    cfg = SimConfig(num_nodes=8, flexible=False, checkpoint_period_s=0.0,
+                    failures=((10.0, 3), (20.0, 3)))
+    sim = ClusterSimulator([_one_job(work=100.0)], cfg)
+    sim.run()
+    assert sim.cluster.live_capacity == 7
+    assert sim.cluster.state_counts()["dead"] == 1
+    # initial capacity is immutable; live capacity is derived state
+    assert sim.cluster.num_nodes == 8
+
+
+def test_fail_node_idempotent_and_unknown_safe():
+    c = Cluster(4)
+    owner = c.allocate(9, 2)
+    assert c.fail_node(owner[0]) == 9
+    assert c.fail_node(owner[0]) is None        # double fail: no-op
+    assert c.fail_node(999) is None             # never-joined node: no-op
+    assert c.live_capacity == 3
+    assert sum(c.state_counts().values()) == c.nodes_ever_joined
+
+
+# ---------------------------------------------------------------------------
+# Satellite bugfix 2: live-capacity denominators
+# ---------------------------------------------------------------------------
+
+def test_utilization_normalized_by_live_capacity():
+    """A job holding every *surviving* node is ~100% utilization — the
+    pre-fix denominator (``config.num_nodes``) reported ~50% after half
+    the cluster died."""
+    cfg = SimConfig(num_nodes=8, flexible=False, checkpoint_period_s=0.0,
+                    failures=((5.0, 4), (6.0, 5), (7.0, 6), (8.0, 7)))
+    sim = ClusterSimulator([_one_job(n=4, work=2000.0)], cfg)
+    rep = sim.run()
+    assert sim.cluster.live_capacity == 4
+    avg, _ = rep.utilization()
+    assert avg > 95.0, f"stale denominator: {avg:.1f}%"
+
+
+def test_phase_band_clamped_to_live_capacity():
+    """A post-failure phase band must not exceed the real cluster (the
+    pre-fix clamp to ``config.num_nodes`` let allocate() blow up)."""
+    cfg = SimConfig(num_nodes=8, flexible=True)
+    job = _one_job(malleable=True)
+    sim = ClusterSimulator([job], cfg)
+    for node in (4, 5, 6, 7):
+        sim.cluster.fail_node(node)
+    assert sim.cluster.live_capacity == 4
+    sim._apply_phase_band(job, 0, 2, 8, 8)
+    assert job.max_nodes == 4
+    assert job.preferred == 4
+    assert job.requested_nodes <= 4
+
+
+def test_moldable_candidates_capped_by_live_capacity():
+    job = Job(job_id=0, app="cg", submit_time=0.0, work=10.0,
+              min_nodes=1, max_nodes=16, preferred=None, requested_nodes=8)
+    # single-arg staticmethod call keeps working (back-compat surface)
+    assert MoldableStartPolicy.candidate_sizes(job) == [1, 2, 4, 8, 16]
+    assert MoldableStartPolicy.candidate_sizes(job, 6) == [1, 2, 4]
+
+
+# ---------------------------------------------------------------------------
+# Satellite bugfix 3: straggler quarantine
+# ---------------------------------------------------------------------------
+
+def test_swapped_straggler_not_reissued_while_healthy_nodes_exist():
+    c = Cluster(4)
+    c.allocate(1, 2)                            # nodes 0, 1
+    c.set_straggler(1, 3.0)
+    assert c.swap_straggler(1) == 1             # 1 swapped out for node 2
+    assert 1 in c.quarantine and 1 not in c.free
+    fresh = c.allocate(2, 1)                    # healthy node first
+    assert fresh == [3]
+    last = c.allocate(3, 1)                     # only now the slow node
+    assert last == [1]
+    assert sum(c.state_counts().values()) == c.nodes_ever_joined
+
+
+def test_free_straggler_quarantined_and_healed_on_rejoin():
+    c = Cluster(3)
+    c.set_straggler(2, 2.0)                     # free node turns slow
+    assert c.quarantine == [2] and 2 not in c.free
+    assert c.allocate(1, 1) == [0]              # healthy-first
+    c.drain_node(2)
+    assert c.join_node(2) == 2                  # maintenance healed it
+    assert 2 in c.free and 2 not in c.quarantine
+    assert c.slow.get(2) is None
+
+
+# ---------------------------------------------------------------------------
+# Conservation invariant (property test)
+# ---------------------------------------------------------------------------
+
+def _apply_random_ops(c: Cluster, rng: random.Random, n_ops: int):
+    jobs = [10, 11, 12]
+    for _ in range(n_ops):
+        op = rng.choice(("alloc", "resize", "release", "fail", "drain",
+                         "join", "off", "on", "slow", "swap"))
+        node = rng.randint(0, c.nodes_ever_joined + 1)
+        job = rng.choice(jobs)
+        if op == "alloc":
+            n = rng.randint(1, 4)
+            if n <= c.free_nodes:
+                c.allocate(job, n)
+        elif op == "resize":
+            if c.allocation(job):
+                want = rng.randint(1, c.allocation(job) + c.free_nodes)
+                c.resize(job, want)
+        elif op == "release":
+            c.release(job)
+        elif op == "fail":
+            c.fail_node(node)
+        elif op == "drain":
+            c.drain_node(node)
+        elif op == "join":
+            c.join_node(node if rng.random() < 0.7 else None)
+        elif op == "off":
+            c.power_off_node(node)
+        elif op == "on":
+            c.power_on_node(node)
+        elif op == "slow":
+            c.set_straggler(node, rng.uniform(1.1, 4.0))
+        elif op == "swap":
+            c.swap_straggler(job)
+        counts = c.state_counts()
+        total = sum(counts.values())
+        assert total == c.nodes_ever_joined, \
+            f"conservation broken after {op}: {counts} != " \
+            f"{c.nodes_ever_joined}"
+        # pools are disjoint: no node appears in two states
+        pools = (c.free + c.quarantine + c.draining + c.powered_off
+                 + sorted(c.dead)
+                 + [n for ns in c.owned.values() for n in ns])
+        assert len(pools) == len(set(pools)), f"pool overlap after {op}"
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000))
+def test_capacity_conservation_under_random_interleavings(seed):
+    """free + allocated + draining + powered_off + dead ==
+    nodes_ever_joined — for any interleaving of capacity ops."""
+    rng = random.Random(seed)
+    c = Cluster(rng.randint(1, 12))
+    _apply_random_ops(c, rng, 60)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic capacity-churn golden trace
+# ---------------------------------------------------------------------------
+
+def churn_scenario():
+    """Drains force DMR shrinks / a slice migration off the doomed node;
+    a mid-wait join grants a waiting async expand the moment it lands."""
+    apps = {
+        "grow": AppModel("grow", iterations=600, t1_iter_s=2.0,
+                         serial_frac=0.0, data_bytes=1 << 20, min_nodes=2,
+                         max_nodes=8, preferred=8, check_period_s=5.0),
+        "wall": AppModel("wall", iterations=100, t1_iter_s=6.0,
+                         serial_frac=0.0, data_bytes=0, min_nodes=6,
+                         max_nodes=6, preferred=None, check_period_s=0.0),
+    }
+    grower = Job(job_id=0, app="grow", submit_time=0.0, work=600.0,
+                 min_nodes=2, max_nodes=8, preferred=8, malleable=True,
+                 check_period_s=5.0, requested_nodes=2, data_bytes=1 << 20)
+    wall = Job(job_id=1, app="wall", submit_time=8.0, work=100.0,
+               min_nodes=6, max_nodes=6, preferred=None, malleable=False,
+               requested_nodes=6)
+    cfg = SimConfig(num_nodes=8, flexible=True, scheduling="async",
+                    checkpoint_period_s=0.0, expand_timeout_s=500.0,
+                    joins=((40.0, -1), (41.0, -1), (200.0, -1)),
+                    drains=((80.0, 9), (120.0, 2), (160.0, 3)))
+    return ClusterSimulator([grower, wall], cfg, apps=apps)
+
+
+def serialize(report) -> dict:
+    return {
+        "makespan": round(report.makespan, 6),
+        "actions": [
+            {"t": round(a.t, 6), "job_id": a.job_id, "action": a.action,
+             "decide_s": round(a.decide_s, 6),
+             "apply_s": round(a.apply_s, 6),
+             "from_nodes": a.from_nodes, "to_nodes": a.to_nodes,
+             "timed_out": a.timed_out, "reason": a.reason}
+            for a in report.actions],
+        "capacity_timeline": [
+            [round(t, 6), live, off]
+            for t, live, off in report.capacity_timeline],
+        "node_hours": round(report.node_hours(), 6),
+    }
+
+
+def run_bytes():
+    rep = churn_scenario().run()
+    doc = serialize(rep)
+    return json.dumps(doc, indent=1, sort_keys=True).encode(), doc
+
+
+def write_golden():
+    data, _ = run_bytes()
+    with open(GOLDEN, "wb") as fh:
+        fh.write(data + b"\n")
+
+
+def test_churn_trace_matches_committed_golden():
+    data, doc = run_bytes()
+    with open(GOLDEN) as fh:
+        golden = json.load(fh)
+    assert doc["makespan"] == golden["makespan"]
+    assert doc["capacity_timeline"] == golden["capacity_timeline"]
+    assert len(doc["actions"]) == len(golden["actions"])
+    for got, want in zip(doc["actions"], golden["actions"]):
+        assert got == want
+    assert doc["node_hours"] == golden["node_hours"]
+
+
+def test_churn_trace_two_runs_byte_identical():
+    assert run_bytes()[0] == run_bytes()[0]
+
+
+def test_churn_trace_exercises_the_negotiation_paths():
+    """The golden scenario must stay event-rich: a drain-forced DMR
+    shrink, a drain slice-migration, join events, and — the §5.2.1 RJ
+    pathology resolved by elasticity — a waiting expand granted exactly
+    when a join lands (not at a periodic check)."""
+    sim = churn_scenario()
+    rep = sim.run()
+    kinds = {a.action for a in rep.actions}
+    assert {"node_join", "node_drain", "drain_shrink",
+            "drain_migrate", "expand"} <= kinds
+    join_ts = {a.t for a in rep.actions if a.action == "node_join"}
+    granted = [a for a in rep.actions
+               if a.action == "expand" and not a.timed_out
+               and a.t in join_ts]
+    assert granted, "no expand granted at a join instant"
+    assert all(j.state is JobState.COMPLETED for j in rep.jobs)
+    counts = sim.cluster.state_counts()
+    assert sum(counts.values()) == sim.cluster.nodes_ever_joined
+    assert counts["draining"] == 3              # all three drains landed
+    # node-hours track the *lived* capacity curve, not initial × makespan
+    fixed = 8 * rep.makespan / 3600.0
+    assert abs(rep.node_hours() - fixed) > 1e-6
+
+
+def test_drain_requeues_rigid_job_and_join_unblocks_it():
+    """No free node + rigid owner => checkpoint requeue; the later join
+    restores enough capacity for the restart to complete."""
+    job = _one_job(n=4, work=600.0)
+    cfg = SimConfig(num_nodes=4, flexible=False, checkpoint_period_s=0.0,
+                    drains=((50.0, 2),), joins=((80.0, -1),))
+    sim = ClusterSimulator([job], cfg)
+    rep = sim.run()
+    kinds = [a.action for a in rep.actions]
+    assert "drain_requeue" in kinds
+    assert job.state is JobState.COMPLETED
+    assert job.end_time > 80.0                  # restarted after the join
+    assert 2 in sim.cluster.draining
+
+
+# ---------------------------------------------------------------------------
+# CLUES-style power management
+# ---------------------------------------------------------------------------
+
+def test_power_cycle_parks_idle_nodes_and_boots_on_demand():
+    a = _one_job(n=1, work=50.0, job_id=0)
+    b = _one_job(n=3, work=10.0, submit=60.0, job_id=1)
+    cfg = SimConfig(num_nodes=4, flexible=False, checkpoint_period_s=0.0,
+                    capacity=CapacityConfig(enabled=True,
+                                            idle_power_off_s=30.0,
+                                            min_free=1,
+                                            power_up_delay_s=10.0))
+    sim = ClusterSimulator([a, b], cfg)
+    rep = sim.run()
+    offs = [x for x in rep.actions if x.action == "power_off"]
+    ons = [x for x in rep.actions if x.action == "power_on"]
+    assert offs and offs[0].t >= 30.0           # parked after the idle dwell
+    assert ons and ons[0].t >= 70.0             # b's demand + boot delay
+    assert b.state is JobState.COMPLETED
+    assert b.start_time >= 70.0                 # waited for the boot
+    assert rep.powered_off_hours() > 0.0
+    assert rep.node_hours() < 4 * rep.makespan / 3600.0 - 1e-9
+
+
+def test_power_off_hysteresis_cancelled_by_queue_pressure():
+    """Pressure arriving inside the idle dwell disarms the park — the
+    armed NodePowerOff re-validates at fire time (CLUES hysteresis)."""
+    a = _one_job(n=1, work=100.0, job_id=0)
+    blocked = _one_job(n=4, work=10.0, submit=20.0, job_id=1)
+    cfg = SimConfig(num_nodes=4, flexible=False, checkpoint_period_s=0.0,
+                    capacity=CapacityConfig(enabled=True,
+                                            idle_power_off_s=30.0,
+                                            min_free=1,
+                                            power_up_delay_s=10.0))
+    sim = ClusterSimulator([a, blocked], cfg)
+    rep = sim.run()
+    early = [x for x in rep.actions
+             if x.action == "power_off" and x.t <= 100.0]
+    assert not early, f"parked under pressure: {early}"
+    assert blocked.state is JobState.COMPLETED
+
+
+def test_join_of_live_node_is_idempotent():
+    c = Cluster(3)
+    assert c.join_node(1) == 1                  # already free: no-op
+    assert c.nodes_ever_joined == 3
+    assert len(c.free) == 3
+    c.allocate(5, 1)
+    assert c.join_node(c.owned[5][0]) == c.owned[5][0]
+    assert c.nodes_ever_joined == 3             # still a member
+    fresh = c.join_node()
+    assert fresh == 3 and c.nodes_ever_joined == 4
+
+
+# ---------------------------------------------------------------------------
+# Churn through the sweep driver (schema v4 determinism)
+# ---------------------------------------------------------------------------
+
+def test_churn_sweep_row_matches_golden_artifact(tmp_path):
+    """One churn grid point re-simulated from scratch must byte-match its
+    row in the committed golden churn artifact, and a journal resume must
+    reuse it without re-running (serial == parallel == resume is locked
+    end-to-end by the CI capacity-churn smoke step)."""
+    from repro.rms import sweep
+
+    golden = sweep.load_artifact(os.path.join(
+        DATA, "golden_capacity_sweep.json"))
+    points, _ = sweep.smoke_grid(os.path.join(DATA, "sample.swf"),
+                                 churn="smoke")
+    point = next(p for p in points
+                 if p.policy == "easy" and p.mix == (0.0, 0.0, 1.0, 0.0))
+    row = sweep.run_point(point)
+    assert row["churn"] == "smoke"
+    assert row["drains"] > 0 and row["joins"] > 0
+    want = [r for r in golden["results"]
+            if sweep.row_key(r) == sweep.row_key(row)]
+    assert len(want) == 1
+    assert row == want[0]
+    # journal resume serves the row without re-simulation
+    journal = str(tmp_path / "churn.jsonl")
+    sweep.run_sweep([point], journal=journal)
+    again = sweep.run_sweep([point], resume_from=(journal,))
+    assert again == [row]

@@ -178,8 +178,9 @@ def test_load_artifact_upgrades_v1(tmp_path):
     row = doc["results"][0]
     assert row["evolving"] == 0.0
     assert row["phase_changes"] == 0
-    # the v1 → v2 → v3 chain lands at the current schema
+    # the v1 → v2 → v3 → v4 chain lands at the current schema
     assert row["calibration_id"] == sweep.PAPER_FIT_ID
+    assert row["churn"] == ""
     assert doc["grid"]["mixes"] == [[0.0, 0.0, 1.0, 0.0]]
     # upgraded rows sort with the current key
     assert sweep.row_key(row)
@@ -202,4 +203,36 @@ def test_load_artifact_upgrades_v2(tmp_path):
     row = doc["results"][0]
     assert row["calibration_id"] == sweep.PAPER_FIT_ID
     assert row["evolving"] == 0.3            # v2 fields untouched
-    assert sweep.row_key(row)[-1] == sweep.PAPER_FIT_ID
+    assert sweep.row_key(row)[-2] == sweep.PAPER_FIT_ID
+    assert sweep.row_key(row)[-1] == ""      # churn lands last in the key
+
+
+def test_load_artifact_upgrades_v3(tmp_path):
+    """Pre-elastic (v3) artifacts stay loadable: fixed-capacity rows gain
+    churn="", node_hours = capacity × makespan (exact for a cluster that
+    never churned), zero powered-off hours and zero capacity events —
+    and the upgraded doc round-trips through the canonical serializer."""
+    v3 = {"schema": sweep.SCHEMA_ID, "version": 3,
+          "grid": {"mixes": [[0.1, 0.2, 0.4, 0.3]]},
+          "results": [{"trace": "t.swf", "policy": "sjf", "rigid": 0.1,
+                       "moldable": 0.2, "malleable": 0.4, "evolving": 0.3,
+                       "flexible": True, "scheduling": "sync",
+                       "num_nodes": 64, "seed": 7, "time_scale": 1.0,
+                       "phase_changes": 3, "makespan_s": 3600.0,
+                       "calibration_id": sweep.PAPER_FIT_ID}]}
+    path = tmp_path / "v3.json"
+    path.write_text(json.dumps(v3))
+    doc = sweep.load_artifact(str(path))
+    assert doc["version"] == sweep.SCHEMA_VERSION
+    row = doc["results"][0]
+    assert row["churn"] == ""
+    assert row["node_hours"] == 64.0         # 64 nodes × 1 h
+    assert row["powered_off_hours"] == 0.0
+    assert row["drains"] == row["joins"] == 0
+    assert row["power_offs"] == row["power_ons"] == 0
+    assert row["phase_changes"] == 3         # v3 fields untouched
+    # upgraded artifact re-loads as native v4 (round-trip stability)
+    out = tmp_path / "v4.json"
+    out.write_text(sweep.dumps_artifact(doc))
+    again = sweep.load_artifact(str(out))
+    assert sweep.dumps_artifact(again) == sweep.dumps_artifact(doc)
