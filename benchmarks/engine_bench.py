@@ -25,7 +25,13 @@ Trajectory artifact schema (``BENCH_engine.json``)::
                       "total_dispatched": ...},
                   "timings": {"<scenario>": {"wall_s": ...,
                       "events_per_sec": ...},
-                      "total_wall_s": ..., "events_per_sec": ...}}]}
+                      "total_wall_s": ..., "events_per_sec": ...,
+                      "sanitize_overhead_x": ...}}]}
+
+The ``sanitize_sjf_mixed_sync`` scenario replays ``sjf_mixed_sync`` in
+checked mode (``SimConfig(sanitize=True)``); its deterministic fields
+must equal the twin's and the bench fails if the wall-time overhead
+reaches 3x.
 
 ``entries`` is append-only history (oldest first); CI checks the *last*
 entry's deterministic fields against a fresh run.
@@ -56,16 +62,28 @@ SCHEMA_VERSION = 1
 #: comparable across entries because these never vary per run.
 WORKLOAD = {"n_jobs": 1000, "num_nodes": 64, "seed": 7, "time_scale": 0.05}
 
-#: (label, policy, (rigid, moldable, malleable, evolving), scheduling).
-#: Chosen to cover the hot paths: sync + async DMR checks, backfill,
-#: evolving phase churn, and the preemption channel.
-SCENARIOS: Tuple[Tuple[str, str, Tuple[float, float, float, float], str],
-                 ...] = (
-    ("easy_all_malleable_sync", "easy", (0.0, 0.0, 1.0, 0.0), "sync"),
-    ("sjf_mixed_sync", "sjf", (0.25, 0.15, 0.3, 0.3), "sync"),
-    ("malleable_async", "malleable", (0.0, 0.0, 1.0, 0.0), "async"),
-    ("preempt_mixed_sync", "preempt", (0.2, 0.2, 0.6, 0.0), "sync"),
+#: (label, policy, (rigid, moldable, malleable, evolving), scheduling,
+#: sanitize).  Chosen to cover the hot paths: sync + async DMR checks,
+#: backfill, evolving phase churn, and the preemption channel.  The
+#: ``sanitize_*`` scenario replays an existing scenario in checked mode
+#: (:mod:`repro.rms.sanitizer`): its deterministic fields must be
+#: identical to the unsanitized twin's, and its wall-time ratio to the
+#: twin is recorded as ``timings["sanitize_overhead_x"]`` and pinned
+#: below :data:`SANITIZE_OVERHEAD_MAX`.
+SCENARIOS: Tuple[Tuple[str, str, Tuple[float, float, float, float], str,
+                       bool], ...] = (
+    ("easy_all_malleable_sync", "easy", (0.0, 0.0, 1.0, 0.0), "sync",
+     False),
+    ("sjf_mixed_sync", "sjf", (0.25, 0.15, 0.3, 0.3), "sync", False),
+    ("malleable_async", "malleable", (0.0, 0.0, 1.0, 0.0), "async", False),
+    ("preempt_mixed_sync", "preempt", (0.2, 0.2, 0.6, 0.0), "sync", False),
+    ("sanitize_sjf_mixed_sync", "sjf", (0.25, 0.15, 0.3, 0.3), "sync",
+     True),
 )
+
+#: The sanitized twin used for the overhead ratio.
+SANITIZE_TWIN = ("sanitize_sjf_mixed_sync", "sjf_mixed_sync")
+SANITIZE_OVERHEAD_MAX = 3.0
 
 ROUND_DIGITS = 6
 
@@ -80,7 +98,8 @@ def _synthetic_trace():
     return parse_swf(lines)
 
 
-def _build_sim(trace, policy: str, mix, scheduling: str):
+def _build_sim(trace, policy: str, mix, scheduling: str,
+               sanitize: bool = False):
     from repro.rms.scheduler import SchedulerConfig
     from repro.rms.simulator import ClusterSimulator, SimConfig
     from repro.workload.swf import MalleabilityMix, jobs_from_swf
@@ -90,11 +109,12 @@ def _build_sim(trace, policy: str, mix, scheduling: str):
         seed=WORKLOAD["seed"], time_scale=WORKLOAD["time_scale"])
     cfg = SimConfig(num_nodes=WORKLOAD["num_nodes"], flexible=True,
                     scheduling=scheduling, seed=WORKLOAD["seed"],
-                    sched=SchedulerConfig(policy=policy))
+                    sanitize=sanitize, sched=SchedulerConfig(policy=policy))
     return ClusterSimulator(jobs, cfg, apps=apps)
 
 
-def run_scenario(trace, policy: str, mix, scheduling: str, repeats: int
+def run_scenario(trace, policy: str, mix, scheduling: str, repeats: int,
+                 sanitize: bool = False
                  ) -> Tuple[Dict[str, object], Dict[str, float]]:
     """Returns ``(deterministic, timings)`` for one scenario.
 
@@ -107,7 +127,7 @@ def run_scenario(trace, policy: str, mix, scheduling: str, repeats: int
     best_wall = None
     det: Dict[str, object] = {}
     for _ in range(max(repeats, 1)):
-        sim = _build_sim(trace, policy, mix, scheduling)
+        sim = _build_sim(trace, policy, mix, scheduling, sanitize)
         t0 = time.perf_counter()
         report = sim.run()
         wall = time.perf_counter() - t0
@@ -138,8 +158,9 @@ def run_bench(repeats: int = 3, verbose: bool = True
               f"best of {repeats})")
         print("scenario,dispatched,actions,completed,makespan_s,"
               "wall_s,events_per_sec")
-    for label, policy, mix, scheduling in SCENARIOS:
-        det, tim = run_scenario(trace, policy, mix, scheduling, repeats)
+    for label, policy, mix, scheduling, sanitize in SCENARIOS:
+        det, tim = run_scenario(trace, policy, mix, scheduling, repeats,
+                                sanitize)
         deterministic[label] = det
         timings[label] = tim
         total_events += det["dispatched"]
@@ -151,9 +172,18 @@ def run_bench(repeats: int = 3, verbose: bool = True
     deterministic["total_dispatched"] = total_events
     timings["total_wall_s"] = round(total_wall, 6)
     timings["events_per_sec"] = round(total_events / total_wall, 1)
+    checked, twin = SANITIZE_TWIN
+    if deterministic[checked] != deterministic[twin]:
+        raise RuntimeError(
+            f"sanitizer perturbed simulation semantics: {checked} "
+            f"{deterministic[checked]} != {twin} {deterministic[twin]}")
+    overhead = timings[checked]["wall_s"] / timings[twin]["wall_s"]
+    timings["sanitize_overhead_x"] = round(overhead, 2)
     if verbose:
         print(f"total,{total_events},,,,{timings['total_wall_s']},"
               f"{timings['events_per_sec']}")
+        print(f"# sanitize overhead: {timings['sanitize_overhead_x']}x "
+              f"(limit {SANITIZE_OVERHEAD_MAX}x)")
     return deterministic, timings
 
 
@@ -225,6 +255,10 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     deterministic, timings = run_bench(repeats=args.repeats)
+    if timings["sanitize_overhead_x"] >= SANITIZE_OVERHEAD_MAX:
+        print(f"# FAIL sanitize overhead {timings['sanitize_overhead_x']}x "
+              f">= {SANITIZE_OVERHEAD_MAX}x budget")
+        return 1
     if args.append:
         append_entry(args.append, args.label, deterministic, timings)
         print(f"# appended entry {args.label!r} to {args.append}")

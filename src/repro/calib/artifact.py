@@ -75,7 +75,8 @@ def content_id(doc: Dict[str, object]) -> str:
     relabelling a synthetic ``plan`` run as a ``jax`` measurement)
     without tripping :func:`validate_calibration`.
     """
-    body = {k: v for k, v in doc.items() if k != "calibration_id"}
+    body = {k: v for k, v in sorted(doc.items())
+            if k != "calibration_id"}
     blob = json.dumps(body, sort_keys=True).encode()
     return hashlib.sha256(blob).hexdigest()[:12]
 

@@ -269,10 +269,12 @@ def measure_grid(config: MeasureConfig
                      f"(expected 'plan' or 'jax')")
 
 
-def calibrate(config: MeasureConfig = MeasureConfig()) -> Dict[str, object]:
+def calibrate(config: Optional[MeasureConfig] = None) -> Dict[str, object]:
     """measure → fit → artifact in one call."""
     from repro.calib.artifact import make_artifact
     from repro.calib.fit import fit_samples
+
+    config = MeasureConfig() if config is None else config
 
     samples, env = measure_grid(config)
     fitted, residuals, checks = fit_samples(samples)

@@ -1,0 +1,68 @@
+"""ENT rules: wall-clock and entropy sources in simulation code.
+
+The simulator's outputs must be a pure function of (workload, config,
+seed).  Any wall-clock or unseeded-RNG call inside a determinism-
+critical module can leak host state into a golden artifact.  The one
+sanctioned timing call is ``time.perf_counter`` — used to *measure*
+in-process policy latency, which is reported out-of-band
+(``SimReport.policy_wall_s``) and never injected into simulation time.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.lint.core import Finding, Module, Rule, dotted_parts, register
+
+TIME_MODULES = {"time", "_time"}
+BANNED_TIME_ATTRS = {"time", "time_ns", "monotonic", "monotonic_ns",
+                     "sleep"}
+DATETIME_ATTRS = {"now", "utcnow", "today"}
+NUMPY_RANDOM_OK = {"default_rng", "Generator", "SeedSequence", "PCG64",
+                   "Philox", "BitGenerator"}
+
+
+@register
+class EntropyRule(Rule):
+    rule_id = "ENT001"
+    title = ("wall-clock/entropy call outside the sanctioned seeded-RNG "
+             "helpers (np.random.default_rng(seed), time.perf_counter)")
+
+    def run(self, mod: Module) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            parts = dotted_parts(node.func)
+            if not parts or len(parts) < 2:
+                continue
+            head, tail = parts[0], parts[-1]
+            if head in TIME_MODULES and len(parts) == 2 and \
+                    tail in BANNED_TIME_ATTRS:
+                yield self.finding(
+                    mod, node, f"{'.'.join(parts)}() reads the wall "
+                    f"clock; simulation time must come from the engine")
+            elif head == "datetime" and tail in DATETIME_ATTRS:
+                yield self.finding(
+                    mod, node, f"{'.'.join(parts)}() reads the wall "
+                    f"clock; thread timestamps in explicitly")
+            elif head == "random":
+                # the stdlib global RNG is process-state; a seeded
+                # random.Random(seed) instance is the only sanctioned use
+                if tail == "Random" and node.args:
+                    continue
+                yield self.finding(
+                    mod, node, f"{'.'.join(parts)}() uses the process-"
+                    f"global RNG; use a seeded np.random.default_rng")
+            elif head in ("np", "numpy") and len(parts) >= 3 and \
+                    parts[1] == "random":
+                if tail == "default_rng":
+                    if not node.args:
+                        yield self.finding(
+                            mod, node, "np.random.default_rng() without "
+                            "a seed draws OS entropy; pass the config "
+                            "seed")
+                elif tail not in NUMPY_RANDOM_OK:
+                    yield self.finding(
+                        mod, node, f"legacy {'.'.join(parts)}() uses "
+                        f"numpy's global RNG; use a seeded "
+                        f"np.random.default_rng")

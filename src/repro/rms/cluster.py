@@ -81,7 +81,7 @@ class Cluster:
                 "dead": len(self.dead)}
 
     def owner_of(self, node: int) -> Optional[int]:
-        for job_id, nodes in self.owned.items():
+        for job_id, nodes in sorted(self.owned.items()):
             if node in nodes:
                 return job_id
         return None
@@ -247,7 +247,7 @@ class Cluster:
             self.dead.add(node)
             self._drain_pending.discard(node)
             return None
-        for job_id, nodes in self.owned.items():
+        for job_id, nodes in sorted(self.owned.items()):
             if node in nodes:
                 nodes.remove(node)
                 self.dead.add(node)

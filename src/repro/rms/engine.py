@@ -190,6 +190,11 @@ class SimulationEngine:
         # registration — dispatch never walks the MRO itself.
         self._chain: Dict[Type[Event], Tuple[Handler, ...]] = {}
         self.dispatched = 0
+        # Optional invariant monitor (the opt-in sanitizer): an object
+        # with ``on_schedule(event)`` / ``before_event(event)`` /
+        # ``after_event(event)``.  Install *before* run() — the hot loop
+        # hoists the reference, so a mid-run swap is not observed.
+        self.monitor = None
 
     # -- registration --------------------------------------------------------
 
@@ -217,6 +222,8 @@ class SimulationEngine:
     # -- scheduling ----------------------------------------------------------
 
     def schedule(self, event: Event) -> None:
+        if self.monitor is not None:
+            self.monitor.on_schedule(event)
         heapq.heappush(self._heap, (event.t, next(self._seq), event))
 
     def schedule_at(self, t: float, event_type: Type[Event], **fields) -> None:
@@ -241,7 +248,12 @@ class SimulationEngine:
         self.dispatched += 1
         if self.dispatched > self.max_events:
             raise RuntimeError("simulation runaway: max_events exceeded")
+        monitor = self.monitor
+        if monitor is not None:
+            monitor.before_event(event)
         self._dispatch(event)
+        if monitor is not None:
+            monitor.after_event(event)
         return True
 
     def run(self) -> None:
@@ -254,6 +266,7 @@ class SimulationEngine:
         chains = self._chain
         dispatched = self.dispatched
         max_events = self.max_events
+        monitor = self.monitor
         try:
             while heap:
                 t, _, event = pop(heap)
@@ -266,7 +279,13 @@ class SimulationEngine:
                 chain = chains.get(cls)
                 if chain is None:
                     chain = self._build_chain(cls)
-                for handler in chain:
-                    handler(event)
+                if monitor is None:
+                    for handler in chain:
+                        handler(event)
+                else:
+                    monitor.before_event(event)
+                    for handler in chain:
+                        handler(event)
+                    monitor.after_event(event)
         finally:
             self.dispatched = dispatched

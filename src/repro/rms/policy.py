@@ -65,8 +65,8 @@ class PolicyConfig:
 class ReconfigPolicy:
     """Stateless decision function over cluster + queue state."""
 
-    def __init__(self, config: PolicyConfig = PolicyConfig()):
-        self.config = config
+    def __init__(self, config: Optional[PolicyConfig] = None):
+        self.config = PolicyConfig() if config is None else config
 
     # -- helpers -------------------------------------------------------------
 

@@ -451,12 +451,13 @@ class FairSharePolicy(EasyBackfillPolicy):
         if dt > 0:
             half = max(self.config.fairshare_halflife_s, 1e-9)
             decay = 0.5 ** (dt / half)
-            self._usage = {u: v * decay for u, v in self._usage.items()}
+            self._usage = {u: v * decay
+                           for u, v in sorted(self._usage.items())}
         for j in jobs:
             self._known.setdefault(j.job_id, j)
         if dt > 0:
             finished = []
-            for job_id, j in self._known.items():
+            for job_id, j in sorted(self._known.items()):
                 ns = self._node_seconds(j, last, now)
                 if ns > 0:
                     self.record_usage(j.user, ns)
@@ -664,11 +665,11 @@ class Scheduler:
     """Thin facade: owns the policy selected by ``SchedulerConfig.policy``."""
 
     def __init__(self, cluster: Cluster,
-                 config: SchedulerConfig = SchedulerConfig(),
+                 config: Optional[SchedulerConfig] = None,
                  cost: Optional[ReconfigCostModel] = None):
         self.cluster = cluster
-        self.config = config
-        self.policy = make_policy(cluster, config, cost=cost)
+        self.config = SchedulerConfig() if config is None else config
+        self.policy = make_policy(cluster, self.config, cost=cost)
 
     def priority(self, job: Job, now: float) -> float:
         return self.policy.priority(job, now)

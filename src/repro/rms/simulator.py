@@ -25,6 +25,7 @@ event types + handlers, not edits to a monolithic loop.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time as _time
 from typing import Dict, List, Optional, Tuple
 
@@ -59,6 +60,9 @@ class SimConfig:
     sched: SchedulerConfig = dataclasses.field(default_factory=SchedulerConfig)
     cost: ReconfigCostModel = dataclasses.field(
         default_factory=ReconfigCostModel)
+    # checked mode: install the runtime invariant sanitizer
+    # (:mod:`repro.rms.sanitizer`); also enabled by ``REPRO_SANITIZE=1``
+    sanitize: bool = False
     failures: Tuple[Tuple[float, int], ...] = ()          # (time, node)
     stragglers: Tuple[Tuple[float, int, float], ...] = () # (time, node, slow)
     # elastic capacity: scheduled churn + CLUES-style power management
@@ -121,7 +125,10 @@ class SimReport:
                            0, None)
             denom = np.maximum(live[cidx], 1.0)
         else:
-            denom = float(max(self.config.num_nodes, 1))
+            # initial capacity IS the live capacity when no churn event
+            # ever recorded a snapshot
+            denom = float(max(self.config.num_nodes,  # lint: disable=CAP001
+                              1))
         samples = alloc[idx] / denom * 100.0
         return float(samples.mean()), float(samples.std())
 
@@ -130,7 +137,8 @@ class SimReport:
         t_end = self.makespan
         if t_end <= 0:
             return 0.0
-        pts = self.capacity_timeline or [(0.0, self.config.num_nodes, 0)]
+        pts = self.capacity_timeline or \
+            [(0.0, self.config.num_nodes, 0)]    # lint: disable=CAP001
         total = 0.0
         for i, pt in enumerate(pts):
             t0 = min(pt[0], t_end)
@@ -163,12 +171,14 @@ class SimReport:
 class ClusterSimulator:
     """RMS simulation: handlers over a :class:`SimulationEngine`."""
 
-    def __init__(self, jobs: List[Job], config: SimConfig = SimConfig(),
+    def __init__(self, jobs: List[Job], config: Optional[SimConfig] = None,
                  apps: Optional[Dict[str, AppModel]] = None):
+        config = SimConfig() if config is None else config
         self.config = config
         self.apps = dict(PAPER_APPS if apps is None else apps)
         self.jobs = jobs
-        self.cluster = Cluster(config.num_nodes)
+        # the one legal construction-time read: t=0 initial capacity
+        self.cluster = Cluster(config.num_nodes)   # lint: disable=CAP001
         self.policy = ReconfigPolicy(config.policy)
         # The scheduler's moldable start-size optimizer and the resize
         # accounting below share one cost model — calibrated when
@@ -211,6 +221,13 @@ class ClusterSimulator:
         self._expand_epoch: Dict[int, int] = {}  # live expand waits / job
         self._wall_decide_s: List[float] = []
         self._wire_handlers()
+        self.sanitizer = None
+        if config.sanitize or \
+                os.environ.get("REPRO_SANITIZE", "") not in ("", "0"):
+            # imported lazily: the sanitizer is optional machinery and
+            # imports scheduler/cluster/engine names from this package
+            from repro.rms.sanitizer import SimSanitizer
+            self.sanitizer = SimSanitizer(self).install()
 
     @property
     def now(self) -> float:
@@ -341,7 +358,8 @@ class ClusterSimulator:
                 self._pending_map[j.job_id] = j
             i += 1
         self._submit_idx = i
-        out = [j for j in self._pending_map.values()
+        out = [j for j in                          # re-sorted by _pos below
+               self._pending_map.values()          # lint: disable=DET001
                if j.state is JobState.PENDING]
         if len(out) != len(self._pending_map):    # externally mutated job
             self._pending_map = {j.job_id: j for j in out}
@@ -350,7 +368,8 @@ class ClusterSimulator:
 
     def _running_jobs(self) -> List[Job]:
         """Running jobs in workload order (see :meth:`_pending_jobs`)."""
-        out = [j for j in self._running_map.values()
+        out = [j for j in                          # re-sorted by _pos below
+               self._running_map.values()          # lint: disable=DET001
                if j.state is JobState.RUNNING]
         if len(out) != len(self._running_map):    # externally mutated job
             self._running_map = {j.job_id: j for j in out}

@@ -199,7 +199,10 @@ def report_row(report, *, trace: str, policy: str,
         "malleable": round(mix[2], ROUND_DIGITS),
         "evolving": round(mix[3], ROUND_DIGITS),
         "flexible": bool(flexible), "scheduling": scheduling,
-        "num_nodes": report.config.num_nodes, "seed": seed,
+        # provenance column: the *configured* initial capacity of the
+        # point, not a denominator
+        "num_nodes": report.config.num_nodes,    # lint: disable=CAP001
+        "seed": seed,
         "time_scale": round(time_scale, ROUND_DIGITS),
         "calibration_id": calibration_id, "churn": churn or "",
         "jobs": len(report.jobs), "completed": completed,
@@ -270,7 +273,9 @@ def row_key(row: Dict[str, object]) -> Tuple:
 # Calibration artifacts are read once per path, not once per grid point:
 # point keys/fingerprints need the content-hash id before any simulation
 # runs, so resume can decide what to skip without touching the simulator.
-_calibration_ids: Dict[str, str] = {}
+_calibration_ids: Dict[str, str] = {}    # lint: disable=MUT002
+# (the cache is keyed by path and holds content-hash ids, so a stale
+# entry is impossible without editing the artifact file mid-process)
 
 
 def _calibration_id(path: Optional[str]) -> str:
@@ -513,7 +518,7 @@ def winners_by_mix(rows: Sequence[Dict[str, object]],
         cand = (float(row[metric]), str(row["policy"]))
         if key not in best or cand < best[key]:
             best[key] = cand
-    return {key: policy for key, (_, policy) in best.items()}
+    return {key: policy for key, (_, policy) in sorted(best.items())}
 
 
 # ---------------------------------------------------------------------------

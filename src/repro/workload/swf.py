@@ -183,7 +183,7 @@ class MalleabilityMix:
 
 
 def annotate_malleability(jobs: Sequence[SWFJob],
-                          mix: MalleabilityMix = MalleabilityMix(),
+                          mix: Optional[MalleabilityMix] = None,
                           *, seed: int = 7) -> List[str]:
     """Deterministically assign a kind to each job, honouring the mix.
 
@@ -193,6 +193,7 @@ def annotate_malleability(jobs: Sequence[SWFJob],
     evolving class existed, so 3-way mixes reproduce their historic
     assignment exactly.
     """
+    mix = MalleabilityMix() if mix is None else mix
     n = len(jobs)
     n_rigid = min(int(round(mix.rigid * n)), n)
     n_mold = min(int(round(mix.moldable * n)), n - n_rigid)
@@ -296,7 +297,7 @@ def _trace_app(rec: SWFJob, kind: str, num_nodes: int,
 
 def jobs_from_swf(trace: Union[SWFTrace, Sequence[SWFJob]], *,
                   num_nodes: int = 64,
-                  mix: MalleabilityMix = MalleabilityMix(),
+                  mix: Optional[MalleabilityMix] = None,
                   seed: int = 7,
                   serial_frac: float = 0.05,
                   data_bytes_per_node: int = 64 * 1024 ** 2,

@@ -1,0 +1,335 @@
+"""repro.lint determinism analyzer: per-rule fixtures + meta checks.
+
+For every rule: a positive fixture (true finding), a negative fixture
+(compliant code, no finding), and a pragma-suppressed fixture.  Plus:
+
+- JSON report schema stability (``repro.lint/v1``, sorted findings, no
+  timestamps — safe to golden-compare),
+- the meta-check that the committed ``src/`` tree is lint-clean,
+- regression pins for the true-positive findings fixed in this PR
+  (shared default-config instances, winner-table ordering).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.lint import (REGISTRY, SCHEMA, Finding, lint_paths, lint_source,
+                        make_rules, render_json, to_json_doc)
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+
+def rules_of(findings):
+    return [f.rule for f in findings]
+
+
+def lint_rms(source, **kw):
+    """Lint a fixture as if it lived in a determinism-critical module."""
+    return lint_source(source, path="src/repro/rms/fixture.py", **kw)
+
+
+# ---------------------------------------------------------------------------
+# DET001 — unordered iteration
+# ---------------------------------------------------------------------------
+
+def test_det001_positive_negative_pragma():
+    pos = "for k, v in table.items():\n    emit(k, v)\n"
+    assert rules_of(lint_rms(pos, select=["DET001"])) == ["DET001"]
+    neg = "for k, v in sorted(table.items()):\n    emit(k, v)\n"
+    assert lint_rms(neg, select=["DET001"]) == []
+    sup = ("for k, v in table.items():   # lint: disable=DET001\n"
+           "    emit(k, v)\n")
+    assert lint_rms(sup, select=["DET001"]) == []
+
+
+def test_det001_comprehension_and_set_literal():
+    pos = "out = [v for v in table.values()]\n"
+    assert rules_of(lint_rms(pos, select=["DET001"])) == ["DET001"]
+    # order-insensitive consumer: the comprehension feeds sum/max/sorted
+    neg = "out = sorted(v for v in table.values())\n"
+    assert lint_rms(neg, select=["DET001"]) == []
+    pos_set = "for x in {3, 1, 2}:\n    emit(x)\n"
+    assert rules_of(lint_rms(pos_set, select=["DET001"])) == ["DET001"]
+
+
+def test_det001_only_fires_in_critical_dirs():
+    pos = "for k in table.items():\n    emit(k)\n"
+    assert lint_source(pos, path="src/repro/cli/tool.py",
+                       select=["DET001"]) == []
+
+
+# ---------------------------------------------------------------------------
+# DET002 — float accumulation over unordered iterables
+# ---------------------------------------------------------------------------
+
+def test_det002_positive_negative_pragma():
+    pos = "total = sum(weights.values())\n"
+    assert rules_of(lint_rms(pos, select=["DET002"])) == ["DET002"]
+    neg = "total = sum(sorted(weights.values()))\n"
+    assert lint_rms(neg, select=["DET002"]) == []
+    # integer-valued accumulation is order-independent: len() elements
+    neg_int = "total = sum(len(v) for v in table.values())\n"
+    assert lint_rms(neg_int, select=["DET002"]) == []
+    sup = "total = sum(weights.values())  # lint: disable=DET002\n"
+    assert lint_rms(sup, select=["DET002"]) == []
+
+
+# ---------------------------------------------------------------------------
+# ENT001 — wall-clock / entropy calls
+# ---------------------------------------------------------------------------
+
+def test_ent001_positive_negative_pragma():
+    pos = "import time\nt0 = time.time()\n"
+    assert rules_of(lint_rms(pos, select=["ENT001"])) == ["ENT001"]
+    neg = "import time\nt0 = time.perf_counter()\n"
+    assert lint_rms(neg, select=["ENT001"]) == []
+    sup = "import time\nt0 = time.time()  # lint: disable=ENT001\n"
+    assert lint_rms(sup, select=["ENT001"]) == []
+
+
+def test_ent001_rng_discipline():
+    assert rules_of(lint_rms("x = random.random()\n",
+                             select=["ENT001"])) == ["ENT001"]
+    assert rules_of(lint_rms("rng = np.random.default_rng()\n",
+                             select=["ENT001"])) == ["ENT001"]
+    assert rules_of(lint_rms("x = np.random.rand(3)\n",
+                             select=["ENT001"])) == ["ENT001"]
+    assert lint_rms("rng = np.random.default_rng(seed)\n",
+                    select=["ENT001"]) == []
+    assert lint_rms("rng = random.Random(7)\n", select=["ENT001"]) == []
+
+
+# ---------------------------------------------------------------------------
+# CAP001 — stale capacity reads
+# ---------------------------------------------------------------------------
+
+def test_cap001_positive_negative_pragma():
+    pos = "denom = self.config.num_nodes\n"
+    assert rules_of(lint_rms(pos, select=["CAP001"])) == ["CAP001"]
+    neg = "denom = self.cluster.live_capacity\n"
+    assert lint_rms(neg, select=["CAP001"]) == []
+    sup = "denom = self.config.num_nodes  # lint: disable=CAP001\n"
+    assert lint_rms(sup, select=["CAP001"]) == []
+
+
+def test_cap001_exempts_cluster_py_and_other_packages():
+    src = "cap = config.num_nodes\n"
+    assert lint_source(src, path="src/repro/rms/cluster.py",
+                       select=["CAP001"]) == []
+    assert lint_source(src, path="src/repro/calib/measure.py",
+                       select=["CAP001"]) == []
+
+
+# ---------------------------------------------------------------------------
+# ENG001 — event dataclasses must be frozen + slotted
+# ---------------------------------------------------------------------------
+
+def test_eng001_positive_negative_pragma():
+    pos = ("import dataclasses\n"
+           "@dataclasses.dataclass(frozen=True)\n"
+           "class Ping(Event):\n"
+           "    t: float\n")
+    assert rules_of(lint_rms(pos, select=["ENG001"])) == ["ENG001"]
+    neg = ("import dataclasses\n"
+           "@dataclasses.dataclass(frozen=True, slots=True)\n"
+           "class Ping(Event):\n"
+           "    t: float\n")
+    assert lint_rms(neg, select=["ENG001"]) == []
+    sup = ("import dataclasses\n"
+           "@dataclasses.dataclass(frozen=True)\n"
+           "class Ping(Event):              # lint: disable=ENG001\n"
+           "    t: float\n")
+    assert lint_rms(sup, select=["ENG001"]) == []
+
+
+# ---------------------------------------------------------------------------
+# ENG002 — epoch-event handlers must guard on the epoch
+# ---------------------------------------------------------------------------
+
+def test_eng002_positive_negative_pragma():
+    pos = "engine.on(ReconfigPoint, lambda ev: check(ev.job_id))\n"
+    assert rules_of(lint_rms(pos, select=["ENG002"])) == ["ENG002"]
+    neg = ("engine.on(ReconfigPoint,\n"
+           "          lambda ev: check(ev.job_id, ev.epoch))\n")
+    assert lint_rms(neg, select=["ENG002"]) == []
+    sup = ("engine.on(ReconfigPoint,   # lint: disable=ENG002\n"
+           "          lambda ev: check(ev.job_id))\n")
+    assert lint_rms(sup, select=["ENG002"]) == []
+
+
+def test_eng002_resolves_named_handlers():
+    pos = ("def on_tick(ev):\n"
+           "    run(ev.job_id)\n"
+           "engine.on(CheckpointTick, on_tick)\n")
+    assert rules_of(lint_rms(pos, select=["ENG002"])) == ["ENG002"]
+    neg = ("def on_tick(ev):\n"
+           "    if ev.epoch != live[ev.job_id]:\n"
+           "        return\n"
+           "engine.on(CheckpointTick, on_tick)\n")
+    assert lint_rms(neg, select=["ENG002"]) == []
+    # non-epoch events need no guard
+    assert lint_rms("engine.on(JobSubmit, lambda ev: go(ev.job_id))\n",
+                    select=["ENG002"]) == []
+
+
+# ---------------------------------------------------------------------------
+# MUT001 — mutable / constructor-call defaults
+# ---------------------------------------------------------------------------
+
+def test_mut001_positive_negative_pragma():
+    pos = "def f(xs=[]):\n    xs.append(1)\n"
+    assert rules_of(lint_rms(pos, select=["MUT001"])) == ["MUT001"]
+    # the shared-default-config bug class: SimConfig() evaluated once
+    pos_call = "def run(config=SimConfig()):\n    return config\n"
+    assert rules_of(lint_rms(pos_call, select=["MUT001"])) == ["MUT001"]
+    neg = "def f(xs=(), config=None):\n    return xs, config\n"
+    assert lint_rms(neg, select=["MUT001"]) == []
+    sup = "def f(xs=[]):   # lint: disable=MUT001\n    xs.append(1)\n"
+    assert lint_rms(sup, select=["MUT001"]) == []
+
+
+# ---------------------------------------------------------------------------
+# MUT002 — module-level mutable state
+# ---------------------------------------------------------------------------
+
+def test_mut002_positive_negative_pragma():
+    pos = "cache = {}\n"
+    assert rules_of(lint_rms(pos, select=["MUT002"])) == ["MUT002"]
+    neg = "REGISTRY = {}\n_limit = 3\n"       # ALL_CAPS registry is idiom
+    assert lint_rms(neg, select=["MUT002"]) == []
+    # function-local mutables are fine
+    assert lint_rms("def f():\n    cache = {}\n    return cache\n",
+                    select=["MUT002"]) == []
+    sup = "cache = {}   # lint: disable=MUT002\n"
+    assert lint_rms(sup, select=["MUT002"]) == []
+
+
+# ---------------------------------------------------------------------------
+# Framework: pragmas, selection, syntax errors, JSON schema
+# ---------------------------------------------------------------------------
+
+def test_pragma_all_suppresses_every_rule():
+    src = "for k in table.items():   # lint: disable=all\n    emit(k)\n"
+    assert lint_rms(src) == []
+
+
+def test_unknown_rule_id_raises():
+    with pytest.raises(ValueError, match="NOPE001"):
+        lint_rms("x = 1\n", select=["NOPE001"])
+
+
+def test_syntax_error_yields_e000():
+    findings = lint_rms("def broken(:\n")
+    assert rules_of(findings) == ["E000"]
+    assert "syntax error" in findings[0].message
+
+
+def test_registry_has_required_rules():
+    assert {"DET001", "DET002", "ENT001", "CAP001", "ENG001", "ENG002",
+            "MUT001", "MUT002"} <= set(REGISTRY)
+
+
+def test_json_report_schema_stable():
+    findings = lint_rms("t0 = time.time()\nfor k in d.items():\n"
+                        "    emit(k, t0)\n")
+    rules = make_rules()
+    doc = to_json_doc(findings, rules)
+    assert sorted(doc) == ["findings", "rules", "schema"]
+    assert doc["schema"] == SCHEMA == "repro.lint/v1"
+    assert set(doc["rules"]) == set(REGISTRY)
+    keys = [(f["path"], f["line"], f["col"], f["rule"])
+            for f in doc["findings"]]
+    assert keys == sorted(keys)
+    assert all(sorted(f) == ["col", "line", "message", "path", "rule"]
+               for f in doc["findings"])
+    # fully deterministic: same findings -> byte-identical report
+    assert render_json(findings, rules) == render_json(
+        list(findings), make_rules())
+    json.loads(render_json(findings, rules))      # valid JSON
+
+
+def test_finding_render_is_clickable():
+    f = Finding("DET001", "src/repro/rms/x.py", 12, 4, "msg")
+    assert f.render() == "src/repro/rms/x.py:12:4: DET001 msg"
+
+
+# ---------------------------------------------------------------------------
+# Meta: the committed tree is lint-clean, and the CLI agrees
+# ---------------------------------------------------------------------------
+
+def test_committed_src_tree_is_lint_clean():
+    findings = lint_paths([SRC])
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_cli_check_mode_exit_codes(tmp_path):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    clean = subprocess.run(
+        [sys.executable, "-m", "repro.lint", SRC, "--check"],
+        capture_output=True, text=True, env=env)
+    assert clean.returncode == 0, clean.stdout + clean.stderr
+    dirty = tmp_path / "rms"
+    dirty.mkdir()
+    (dirty / "bad.py").write_text("t0 = time.time()\n")
+    run = subprocess.run(
+        [sys.executable, "-m", "repro.lint", str(tmp_path), "--json"],
+        capture_output=True, text=True, env=env)
+    assert run.returncode == 1
+    doc = json.loads(run.stdout)
+    assert [f["rule"] for f in doc["findings"]] == ["ENT001"]
+
+
+# ---------------------------------------------------------------------------
+# Regression pins for this PR's true-positive fixes
+# ---------------------------------------------------------------------------
+
+def test_default_configs_are_not_shared_instances():
+    """MUT001 fixes: ``def __init__(..., config=SimConfig())`` evaluated
+    the default once per process — band edits in one sweep point leaked
+    into every later point.  Defaults are None-sentinels now."""
+    from repro.rms.policy import ReconfigPolicy
+    from repro.rms.scheduler import Scheduler
+    from repro.rms.simulator import ClusterSimulator
+    from repro.rms.cluster import Cluster
+
+    a = ClusterSimulator([])
+    b = ClusterSimulator([])
+    assert a.config is not b.config
+    a.config.num_nodes = 3
+    assert b.config.num_nodes != 3
+    s1, s2 = Scheduler(Cluster(4)), Scheduler(Cluster(4))
+    assert s1.config is not s2.config
+    assert s1.policy.config is s1.config      # resolved config is threaded
+    p1, p2 = ReconfigPolicy(), ReconfigPolicy()
+    assert p1.config is not p2.config
+
+    import inspect
+    from repro.calib.measure import calibrate
+    from repro.workload.swf import annotate_malleability
+    assert inspect.signature(calibrate).parameters["config"].default is None
+    assert inspect.signature(
+        annotate_malleability).parameters["mix"].default is None
+
+
+def test_winner_table_ordering_is_deterministic():
+    """DET001 fix: winners_by_mix built its table in dict-insertion order
+    (row order); the returned mapping is key-sorted now."""
+    from repro.rms.sweep import winners_by_mix
+
+    rows = [
+        {"trace": "z", "rigid": 1.0, "moldable": 0.0, "malleable": 0.0,
+         "evolving": 0.0, "policy": "easy", "makespan_s": 10.0},
+        {"trace": "a", "rigid": 0.0, "moldable": 0.0, "malleable": 1.0,
+         "evolving": 0.0, "policy": "sjf", "makespan_s": 5.0},
+        {"trace": "a", "rigid": 0.0, "moldable": 0.0, "malleable": 1.0,
+         "evolving": 0.0, "policy": "easy", "makespan_s": 7.0},
+    ]
+    winners = winners_by_mix(rows)
+    assert list(winners) == sorted(winners)
+    assert winners[("a", 0.0, 0.0, 1.0, 0.0)] == "sjf"
+    assert winners == winners_by_mix(list(reversed(rows)))
+    assert list(winners) == list(winners_by_mix(list(reversed(rows))))

@@ -1,0 +1,255 @@
+"""Runtime sanitizer (:mod:`repro.rms.sanitizer`): mutation suite.
+
+Each mutation test monkeypatches one deliberate bug into the simulator or
+cluster — a bug class the sanitizer exists to catch — runs a small
+scenario in checked mode, and asserts a :class:`SanitizerError` naming
+exactly the violated invariant:
+
+1. double-decrement node accounting on failure -> ``node_conservation``
+2. recycling a quarantined (slow) node into the free list
+   -> ``quarantine_routing``
+3. reusing a stale check-chain epoch after a requeue
+   -> ``duplicate_check_chain``
+4. corrupting fairshare node-second billing -> ``fairshare_billing``
+5. inverting a phase band on application -> ``band_order``
+6. scheduling a completion without bumping the version
+   -> ``completion_version``
+
+Plus the clean-mode contract: a sanitized run of the capacity-churn
+golden scenario reports zero violations and produces byte-identical
+artifacts to the unsanitized run.
+"""
+import dataclasses
+import json
+
+import pytest
+
+import test_capacity
+from repro.rms.cluster import Cluster
+from repro.rms.engine import JobFinish
+from repro.rms.job import Job, JobPhase
+from repro.rms.costmodel import AppModel
+from repro.rms.sanitizer import SanitizerError, SimSanitizer
+from repro.rms.scheduler import FairSharePolicy, SchedulerConfig
+from repro.rms.simulator import ClusterSimulator, SimConfig
+
+
+def make_app(name, lo, hi, preferred=None, check_period_s=15.0, phases=()):
+    return AppModel(name, iterations=400, t1_iter_s=2.0, serial_frac=0.0,
+                    data_bytes=1 << 20, min_nodes=lo, max_nodes=hi,
+                    preferred=preferred, check_period_s=check_period_s,
+                    phases=phases)
+
+
+def make_job(n, *, lo=None, hi=None, work=400.0, submit=0.0, job_id=0,
+             malleable=False, user=0, phases=()):
+    lo = n if lo is None else lo
+    hi = n if hi is None else hi
+    return Job(job_id=job_id, app="app", submit_time=submit, work=work,
+               min_nodes=lo, max_nodes=hi, preferred=None, factor=2,
+               malleable=malleable, check_period_s=15.0,
+               requested_nodes=n, data_bytes=1 << 20, user=user,
+               phases=phases)
+
+
+def run_sanitized(jobs, cfg, apps):
+    cfg = dataclasses.replace(cfg, sanitize=True)
+    sim = ClusterSimulator(jobs, cfg, apps=apps)
+    assert sim.sanitizer is not None
+    sim.run()
+    return sim
+
+
+# ---------------------------------------------------------------------------
+# Mutation 1: lose a node on failure accounting
+# ---------------------------------------------------------------------------
+
+def test_catches_node_conservation_break(monkeypatch):
+    inner = Cluster.fail_node
+
+    def leaky_fail(self, node):
+        out = inner(self, node)
+        if self.free:
+            self.free.pop()        # bug: a second node silently vanishes
+        return out
+
+    monkeypatch.setattr(Cluster, "fail_node", leaky_fail)
+    cfg = SimConfig(num_nodes=4, flexible=False, sanitize=True,
+                    failures=((10.0, 3),))
+    sim = ClusterSimulator([make_job(2)], cfg, apps={"app": make_app(
+        "app", 2, 2)})
+    with pytest.raises(SanitizerError) as err:
+        sim.run()
+    assert err.value.invariant == "node_conservation"
+    # the error is structured: event, sim time, and detail ride along
+    assert err.value.t == pytest.approx(10.0)
+    assert type(err.value.event).__name__ == "NodeFail"
+    assert "nodes_ever_joined" in err.value.detail
+
+
+# ---------------------------------------------------------------------------
+# Mutation 2: recycle a quarantined node into the free list
+# ---------------------------------------------------------------------------
+
+def test_catches_slow_node_in_free_pool(monkeypatch):
+    def careless_route(self, nodes):
+        for node in nodes:
+            self._drain_pending.discard(node)
+            self.free.append(node)   # bug: ignores quarantine routing
+
+    monkeypatch.setattr(Cluster, "_route_released", careless_route)
+    cfg = SimConfig(num_nodes=4, flexible=False, sanitize=True,
+                    stragglers=((20.0, 1, 2.0),))
+    sim = ClusterSimulator([make_job(2)], cfg, apps={"app": make_app(
+        "app", 2, 2)})
+    with pytest.raises(SanitizerError) as err:
+        sim.run()
+    assert err.value.invariant == "quarantine_routing"
+
+
+# ---------------------------------------------------------------------------
+# Mutation 3: requeue forgets to retire the check-chain epoch
+# ---------------------------------------------------------------------------
+
+def test_catches_duplicate_check_chain_after_requeue(monkeypatch):
+    inner = ClusterSimulator._requeue
+
+    def stale_epoch_requeue(self, job, action, from_nodes, reason):
+        inner(self, job, action, from_nodes, reason)
+        # bug: roll the epoch back so the restart re-derives the epoch of
+        # the still-pending chain instead of a fresh one
+        self._reconfig_epoch[job.job_id] -= 1
+
+    monkeypatch.setattr(ClusterSimulator, "_requeue", stale_epoch_requeue)
+    # min == nodes: one failed node forces a requeue; 7 survivors in the
+    # pool let the scheduler restart the job within the same event, which
+    # schedules a second ReconfigPoint chain under the stale epoch.
+    cfg = SimConfig(num_nodes=8, flexible=True, sanitize=True,
+                    failures=((10.0, 0),))
+    sim = ClusterSimulator([make_job(4, malleable=True)], cfg,
+                           apps={"app": make_app("app", 4, 4)})
+    with pytest.raises(SanitizerError) as err:
+        sim.run()
+    assert err.value.invariant == "duplicate_check_chain"
+
+
+# ---------------------------------------------------------------------------
+# Mutation 4: fairshare billing corruption
+# ---------------------------------------------------------------------------
+
+def test_catches_fairshare_billing_drift(monkeypatch):
+    monkeypatch.setattr(FairSharePolicy, "_node_seconds",
+                        staticmethod(lambda job, a, b: 0.0))  # bills nothing
+    cfg = SimConfig(num_nodes=8, flexible=False, sanitize=True,
+                    sched=SchedulerConfig(policy="fairshare"))
+    jobs = [make_job(2, work=100.0, job_id=0, user=0),
+            make_job(2, work=100.0, submit=30.0, job_id=1, user=1)]
+    sim = ClusterSimulator(jobs, cfg, apps={"app": make_app("app", 2, 2)})
+    with pytest.raises(SanitizerError) as err:
+        sim.run()
+    assert err.value.invariant == "fairshare_billing"
+
+
+# ---------------------------------------------------------------------------
+# Mutation 5: phase band applied inverted
+# ---------------------------------------------------------------------------
+
+def test_catches_inverted_phase_band(monkeypatch):
+    inner = ClusterSimulator._apply_phase_band
+
+    def inverted_band(self, job, phase_idx, min_nodes, max_nodes,
+                      preferred):
+        inner(self, job, phase_idx, min_nodes, max_nodes, preferred)
+        job.min_nodes, job.max_nodes = job.max_nodes, job.min_nodes
+
+    monkeypatch.setattr(ClusterSimulator, "_apply_phase_band",
+                        inverted_band)
+    phases = (JobPhase(work=100.0, min_nodes=4, max_nodes=4, preferred=4,
+                       serial_frac=0.0),
+              JobPhase(work=100.0, min_nodes=1, max_nodes=2, preferred=2,
+                       serial_frac=0.0))
+    app = make_app("app", 1, 4, check_period_s=5.0, phases=phases)
+    job = make_job(4, lo=4, hi=4, work=200.0, malleable=True,
+                   phases=phases)
+    cfg = SimConfig(num_nodes=4, flexible=True, sanitize=True)
+    sim = ClusterSimulator([job], cfg, apps={"app": app})
+    with pytest.raises(SanitizerError) as err:
+        sim.run()
+    assert err.value.invariant == "band_order"
+
+
+# ---------------------------------------------------------------------------
+# Mutation 6: completion rescheduled without a version bump
+# ---------------------------------------------------------------------------
+
+def test_catches_missing_completion_version_bump(monkeypatch):
+    def unversioned_completion(self, job):
+        remaining = max(job.work - job.work_done, 0.0)
+        t0 = max(self.now, job.paused_until)
+        self.engine.schedule(JobFinish(t0 + remaining / self._rate(job),
+                                       job.job_id, job.completion_version))
+        self._schedule_phase_change(job, t0)
+
+    monkeypatch.setattr(ClusterSimulator, "_schedule_completion",
+                        unversioned_completion)
+    # the failure shrink re-schedules completion: without the bump the old
+    # pending JobFinish shares the new one's version
+    cfg = SimConfig(num_nodes=8, flexible=True, sanitize=True,
+                    failures=((10.0, 0),))
+    sim = ClusterSimulator([make_job(4, lo=2, hi=4, malleable=True)], cfg,
+                           apps={"app": make_app("app", 2, 4)})
+    with pytest.raises(SanitizerError) as err:
+        sim.run()
+    assert err.value.invariant == "completion_version"
+
+
+# ---------------------------------------------------------------------------
+# Clean mode: zero violations, byte-identical artifacts
+# ---------------------------------------------------------------------------
+
+def test_clean_churn_run_has_zero_violations_and_identical_bytes(
+        monkeypatch):
+    plain, _ = test_capacity.run_bytes()
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    sim = test_capacity.churn_scenario()
+    assert sim.sanitizer is not None
+    report = sim.run()
+    checked = json.dumps(test_capacity.serialize(report), indent=1,
+                         sort_keys=True).encode()
+    assert sim.sanitizer.checks == sim.engine.dispatched
+    assert checked == plain
+
+
+def test_sanitize_opt_in_paths(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    jobs = [make_job(2, work=10.0)]
+    apps = {"app": make_app("app", 2, 2)}
+    off = ClusterSimulator(jobs, SimConfig(num_nodes=4), apps=apps)
+    assert off.sanitizer is None and off.engine.monitor is None
+    flag = ClusterSimulator([make_job(2, work=10.0)],
+                            SimConfig(num_nodes=4, sanitize=True),
+                            apps=apps)
+    assert isinstance(flag.sanitizer, SimSanitizer)
+    assert flag.engine.monitor is flag.sanitizer
+    monkeypatch.setenv("REPRO_SANITIZE", "0")   # explicit off
+    zero = ClusterSimulator([make_job(2, work=10.0)],
+                            SimConfig(num_nodes=4), apps=apps)
+    assert zero.sanitizer is None
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    env = ClusterSimulator([make_job(2, work=10.0)],
+                           SimConfig(num_nodes=4), apps=apps)
+    assert isinstance(env.sanitizer, SimSanitizer)
+
+
+def test_fairshare_clean_run_under_sanitizer():
+    """The shadow ledger must agree with the real one on a healthy run
+    (several passes, a resize-free mixed workload, two users)."""
+    cfg = SimConfig(num_nodes=8, flexible=False, sanitize=True,
+                    sched=SchedulerConfig(policy="fairshare"))
+    jobs = [make_job(2, work=100.0, job_id=0, user=0),
+            make_job(2, work=100.0, submit=30.0, job_id=1, user=1),
+            make_job(4, work=50.0, submit=60.0, job_id=2, user=0)]
+    sim = ClusterSimulator(jobs, cfg, apps={"app": make_app("app", 2, 4)})
+    sim.run()                      # no SanitizerError
+    assert sim.sanitizer.checks > 0
+    assert sim.scheduler.policy._usage    # billing actually happened
