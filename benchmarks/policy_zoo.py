@@ -11,10 +11,19 @@ Winner tables report two objective axes per policy: the winning metric
 a policy that finishes marginally later while letting the power manager
 park more capacity can be the cheaper choice.
 
+With ``--serving`` the mixes include an SLO-bound SERVING share and a
+second winner table is printed per mix: the makespan winner next to the
+slo_violations winner.  The two routinely disagree — a policy that
+packs batch jobs tightest (moldable's start-size optimizer) starves
+serving jobs of expansion headroom and pays for its makespan in SLO
+violations — which is the batch-vs-serving co-scheduling trade-off this
+zoo exists to surface.
+
   PYTHONPATH=src python benchmarks/policy_zoo.py \\
       [--trace tests/data/sample.swf] [--nodes 64] [--workers 4] \\
       [--mixes 1:0:0:0,0.2:0.2:0.6:0,0.2:0.1:0.4:0.3] \\
-      [--metric makespan_s] [--churn smoke] [--artifact zoo.json]
+      [--metric makespan_s] [--churn smoke] [--serving] \\
+      [--artifact zoo.json]
 """
 from __future__ import annotations
 
@@ -29,13 +38,16 @@ from repro.rms.sweep import (artifact, build_grid, csv_lines, parse_mixes,
 DEFAULT_TRACE = os.path.join(os.path.dirname(__file__), "..", "tests",
                              "data", "sample.swf")
 DEFAULT_MIXES = "1:0:0:0,0.2:0.2:0.6:0,0:0:1:0,0.2:0.1:0.4:0.3,0:0:0.3:0.7"
+#: ``--serving`` default: batch/serving co-scheduling mixes (the last
+#: field is the SERVING share of jobs).
+SERVING_MIXES = "0:0:0.7:0:0.3,0.25:0:0.25:0.2:0.3,0:0:0.4:0:0.6"
 
 
 def run_zoo(trace: str, *, num_nodes: int = 64, workers: int = 0,
             mixes=None, seed: int = 7, metric: str = "makespan_s",
             churn=None):
     """Returns (rows, winners): sweep rows + winning policy keyed by
-    ``(trace, rigid, moldable, malleable, evolving)``."""
+    ``(trace, rigid, moldable, malleable, evolving, serving)``."""
     mixes = mixes or parse_mixes(DEFAULT_MIXES)
     policies = sorted(POLICY_REGISTRY)
     points = build_grid([trace], policies, mixes, (True,),
@@ -58,10 +70,16 @@ def main(argv=None):
                     help="run the zoo on an elastic cluster: named "
                          "capacity-churn scenario (drains/joins + power "
                          "management)")
+    ap.add_argument("--serving", action="store_true",
+                    help="co-schedule SLO-bound serving jobs with the "
+                         "batch mix (default mixes gain a serving share) "
+                         "and print the makespan-vs-SLO winner table")
     ap.add_argument("--artifact", default=None,
                     help="write the versioned JSON artifact here")
     args = ap.parse_args(argv)
 
+    if args.serving and args.mixes == DEFAULT_MIXES:
+        args.mixes = SERVING_MIXES
     mixes = parse_mixes(args.mixes)
     policies = sorted(POLICY_REGISTRY)
     print(f"# policy zoo: {os.path.basename(args.trace)}, "
@@ -80,13 +98,15 @@ def main(argv=None):
     by_key = {}
     for row in rows:
         by_key.setdefault((row["trace"], row["rigid"], row["moldable"],
-                           row["malleable"], row["evolving"]), []).append(row)
+                           row["malleable"], row["evolving"],
+                           row["serving"]), []).append(row)
     print(f"\n# winner per trace x mix (lowest {args.metric}; "
           f"cells are {args.metric}/node_hours):")
-    print(f"{'trace':<20} {'rigid':>6} {'mold':>6} {'mall':>6} {'evol':>6}  "
+    print(f"{'trace':<20} {'rigid':>6} {'mold':>6} {'mall':>6} {'evol':>6} "
+          f"{'serv':>6}  "
           f"{'winner':<12} " + " ".join(f"{p:>16}" for p in policies))
     for key in sorted(by_key):
-        trace, rigid, mold, mall, evol = key
+        trace, rigid, mold, mall, evol, serv = key
         vals = {r["policy"]: (float(r[args.metric]),
                               float(r.get("node_hours", 0.0)))
                 for r in by_key[key]}
@@ -94,7 +114,25 @@ def main(argv=None):
             f"{vals[p][0]:9.0f}/{vals[p][1]:6.0f}" if p in vals
             else f"{'-':>16}" for p in policies)
         print(f"{trace:<20} {rigid:6.2f} {mold:6.2f} {mall:6.2f} "
-              f"{evol:6.2f}  {winners[key]:<12} {cells}")
+              f"{evol:6.2f} {serv:6.2f}  {winners[key]:<12} {cells}")
+
+    if args.serving:
+        slo_winners = winners_by_mix(rows, metric="slo_violations")
+        print("\n# makespan vs SLO winner per trace x mix "
+              "('*' = they disagree: the winner on makespan pays for it "
+              "in SLO violations):")
+        print(f"{'trace':<20} {'serv':>6}  {'makespan winner':<28} "
+              f"{'slo winner':<28}")
+        for key in sorted(by_key):
+            vals = {r["policy"]: (float(r["makespan_s"]),
+                                  int(r["slo_violations"]))
+                    for r in by_key[key]}
+            mk, sl = winners[key], slo_winners[key]
+            mark = " *" if mk != sl else ""
+            print(f"{key[0]:<20} {key[5]:6.2f}  "
+                  f"{mk} ({vals[mk][0]:.0f}s, {vals[mk][1]} viol)"
+                  f"{'':<4} {sl} ({vals[sl][0]:.0f}s, {vals[sl][1]} viol)"
+                  f"{mark}")
 
     if args.artifact:
         grid = {"traces": [os.path.basename(args.trace)],

@@ -19,7 +19,7 @@ from typing import Dict, Iterator, Optional
 from repro.lint.core import Finding, Module, Rule, register, terminal_name
 
 EPOCH_EVENTS = {"ReconfigPoint", "CheckpointTick", "PhaseChange",
-                "ExpandTimeout"}
+                "ExpandTimeout", "TrafficTick"}
 
 
 def _dataclass_decorator(cls: ast.ClassDef) -> Optional[ast.AST]:

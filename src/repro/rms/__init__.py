@@ -7,7 +7,7 @@ from repro.rms.engine import (CheckpointTick, Event, ExpandTimeout, JobFinish,
                               JobSubmit, NodeDrain, NodeFail, NodeJoin,
                               NodePowerOff, NodePowerOn, PhaseChange,
                               ReconfigPoint, SimulationEngine,
-                              StragglerOnset, StragglerScan)
+                              StragglerOnset, StragglerScan, TrafficTick)
 from repro.rms.job import Job, JobPhase, JobState
 from repro.rms.policy import PolicyConfig, ReconfigPolicy, factor_sizes
 from repro.rms.scheduler import (MAX_PRIORITY, POLICY_REGISTRY,
@@ -29,6 +29,7 @@ __all__ = ["Cluster", "PAPER_APPS", "AppModel", "ReconfigCostModel",
            "SimulationEngine", "Event", "JobSubmit", "JobFinish",
            "ReconfigPoint", "ExpandTimeout", "NodeFail", "PhaseChange",
            "StragglerOnset", "StragglerScan", "CheckpointTick",
+           "TrafficTick",
            "NodeJoin", "NodeDrain", "NodePowerOff", "NodePowerOn",
            "CapacityConfig", "CapacityManager", "CHURN_SCENARIOS",
            "churn_schedule", "plan_drain"]

@@ -46,6 +46,11 @@ Event              Paper section
                    (mechanically the §5.2.2 shrink data-fold on one slice).
 ``CheckpointTick`` §6 deployment — periodic checkpoint, the restore point
                    used by the ``NodeFail`` path.
+``TrafficTick``    beyond-paper SERVING class: the periodic latency probe of
+                   an open-loop request stream — drains backlog at the app
+                   rate, samples p99 vs the SLO, and (like ReconfigPoint)
+                   carries an ``epoch`` so a requeue structurally retires
+                   the pending chain.
 =================  ==========================================================
 
 Determinism contract: events are dispatched in ``(t, seq)`` order where
@@ -144,6 +149,20 @@ class StragglerScan(Event):
 
 @dataclasses.dataclass(frozen=True, slots=True)
 class CheckpointTick(Event):
+    job_id: int
+    epoch: int = 0        # invalidates a chain left over from a prior start
+
+
+@dataclasses.dataclass(frozen=True, slots=True)
+class TrafficTick(Event):
+    """Periodic backlog/latency probe for a SERVING job.
+
+    The handler accrues open-loop arrivals, drains what the current
+    allocation served since the last tick, samples the queueing-delay p99
+    against the job's SLO, and re-arms itself; ``epoch`` guards against a
+    stale chain surviving a requeue/restart (same pattern as
+    ReconfigPoint).
+    """
     job_id: int
     epoch: int = 0        # invalidates a chain left over from a prior start
 

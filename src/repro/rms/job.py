@@ -9,7 +9,10 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import List, Optional, Tuple
+from typing import TYPE_CHECKING, List, Optional, Tuple
+
+if TYPE_CHECKING:   # import cycle: workload.swf builds Job instances
+    from repro.workload.traffic import TrafficSpec
 
 
 class JobState(enum.Enum):
@@ -74,6 +77,11 @@ class Job:
     # band — the PhaseChange handler rewrites them per phase, and every
     # scheduling policy must consult them instead of submission-time copies.
     phases: Tuple[JobPhase, ...] = ()
+    # SERVING class: the open-loop request stream this job drains.  When
+    # set, ``work`` is the stream's total arrivals, progress is request
+    # drain (no checkpoint rewind — served requests can't be un-served),
+    # and DMR negotiation runs on SLO pressure instead of remaining work.
+    traffic: Optional["TrafficSpec"] = None
 
     # -- dynamic state (owned by the RMS / simulator) ------------------------
     state: JobState = JobState.PENDING
@@ -97,6 +105,10 @@ class Job:
     @property
     def evolving(self) -> bool:
         return bool(self.phases)
+
+    @property
+    def serving(self) -> bool:
+        return self.traffic is not None
 
     def current_phase(self) -> Optional[JobPhase]:
         if not self.phases:

@@ -81,7 +81,8 @@ class ReconfigPolicy:
 
     def decide(self, cluster: Cluster, pending: Sequence[Job], job: Job, *,
                minimum: int, maximum: int, factor: int = 2,
-               preferred: Optional[int] = None) -> Decision:
+               preferred: Optional[int] = None,
+               slo_pressure: Optional[float] = None) -> Decision:
         cur = cluster.allocation(job.job_id) or job.nodes
         free = cluster.free_nodes
         pending = [j for j in pending
@@ -91,6 +92,12 @@ class ReconfigPolicy:
         live = max(cluster.live_capacity, 1)
         lo = max(1, min(minimum, live))
         hi = max(lo, min(maximum, live))
+        # SERVING jobs ride mode 1 with dedicated reasons: the band was
+        # derived from p99/SLO pressure, not remaining work, and a steady
+        # announcement (neither bound crosses ``cur``) holds deliberately
+        # instead of falling through to modes 2/3 — batch heuristics must
+        # not resize a latency-bound job the SLO rule chose to leave alone.
+        slo = slo_pressure is not None
 
         # ---- mode 1: request an action (§4.1) ------------------------------
         if minimum > cur:
@@ -98,16 +105,22 @@ class ReconfigPolicy:
             ups = [s for s in ups if s - cur <= free]
             if ups:
                 return Decision(Action.EXPAND, ups[0],
-                                reason="requested-expand")
+                                reason="slo-expand" if slo
+                                else "requested-expand")
             return Decision(Action.NO_ACTION, cur,
-                            reason="requested-expand-denied")
+                            reason="slo-expand-denied" if slo
+                            else "requested-expand-denied")
         if maximum < cur:
             downs = _shrinks(cur, factor, lo, maximum)
             if downs:
                 return Decision(Action.SHRINK, downs[-1],
-                                reason="requested-shrink")
+                                reason="slo-shrink" if slo
+                                else "requested-shrink")
             return Decision(Action.NO_ACTION, cur,
-                            reason="requested-shrink-denied")
+                            reason="slo-shrink-denied" if slo
+                            else "requested-shrink-denied")
+        if slo:
+            return Decision(Action.NO_ACTION, cur, reason="slo-steady")
 
         # ---- mode 2: preferred number of nodes (§4.2) ----------------------
         if preferred is not None:

@@ -35,6 +35,12 @@ Invariant name              Meaning
                             property (gated full scan).
 ``fairshare_billing``       the FairShare ledger matches an independent
                             shadow re-billing to < 1e-9 relative drift.
+``serving_backlog``         a SERVING job's backlog / served counters are
+                            non-negative and served never exceeds the
+                            stream total.
+``serving_conservation``    open-loop conservation: arrivals accrued ==
+                            backlog + served (requests are neither minted
+                            nor dropped by resizes/requeues).
 ==========================  ================================================
 
 A violation raises :class:`SanitizerError` carrying the invariant name,
@@ -53,7 +59,7 @@ from typing import Dict, List, Optional, Set, Tuple
 from repro.rms.engine import (CheckpointTick, Event, ExpandTimeout,
                               JobFinish, NodeDrain, NodeFail, NodeJoin,
                               NodePowerOff, NodePowerOn, PhaseChange,
-                              ReconfigPoint)
+                              ReconfigPoint, TrafficTick)
 from repro.rms.job import Job, JobState
 from repro.rms.scheduler import FairSharePolicy
 
@@ -71,12 +77,18 @@ CHURN_EVENTS = (NodeFail, NodeJoin, NodeDrain, NodePowerOff, NodePowerOn)
 # excluded: two pending timeouts under one epoch are legal (a wait can be
 # granted and re-entered without an epoch bump; ``since`` disambiguates).
 _CHAIN_KINDS = {ReconfigPoint: "reconfig", CheckpointTick: "ckpt",
-                PhaseChange: "phase"}
+                PhaseChange: "phase", TrafficTick: "traffic"}
 
 _EPOCH_ATTRS = {ReconfigPoint: "_reconfig_epoch",
                 CheckpointTick: "_ckpt_epoch",
                 PhaseChange: "_phase_epoch",
-                ExpandTimeout: "_expand_epoch"}
+                ExpandTimeout: "_expand_epoch",
+                TrafficTick: "_traffic_epoch"}
+
+# Relative slack for the serving conservation check: the drain integrates
+# float arithmetic per event, and completion snaps a remainder of at most
+# 1e-6 * work into served.
+SERVING_TOL = 1e-6
 
 
 class SanitizerError(AssertionError):
@@ -287,6 +299,40 @@ class SimSanitizer:
             self._fail("allocation_mismatch", event,
                        f"{job.state.name} job {job.job_id} still holds "
                        f"{alloc} cluster nodes")
+        if job.traffic is not None:
+            self._check_serving(job, event)
+
+    def _check_serving(self, job: Job, event: Optional[Event]):
+        """SERVING queueing state: sign bounds + open-loop conservation.
+
+        The stream is open-loop, so at any instant the arrivals accrued up
+        to ``_traffic_seen`` must equal backlog + served exactly (to float
+        slack): a resize or requeue can delay requests but can neither
+        drop nor mint them.  The re-derivation reads the generator — pure
+        in (seed, curve) — not the simulator's own accounting.
+        """
+        sim = self.sim
+        jid = job.job_id
+        gen = sim._traffic.get(jid)
+        if gen is None:
+            self._fail("serving_backlog", event,
+                       f"serving job {jid} has no traffic generator")
+        backlog = sim._backlog.get(jid, 0.0)
+        tol = SERVING_TOL * max(job.work, 1.0)
+        if backlog < -T_EPS:
+            self._fail("serving_backlog", event,
+                       f"job {jid} backlog is negative: {backlog!r}")
+        if not -T_EPS <= job.work_done <= job.work + tol:
+            self._fail("serving_backlog", event,
+                       f"job {jid} served {job.work_done!r} outside "
+                       f"[0, work={job.work!r}]")
+        seen = sim._traffic_seen.get(jid, job.traffic.t0)
+        arrivals = gen.arrivals_until(seen)
+        if abs(arrivals - (backlog + job.work_done)) > tol:
+            self._fail("serving_conservation", event,
+                       f"job {jid}: arrivals({seen!r})={arrivals!r} but "
+                       f"backlog {backlog!r} + served {job.work_done!r} "
+                       f"= {backlog + job.work_done!r}")
 
     def _check_expand_waits(self, event: Optional[Event]):
         waiting: Set[int] = set()

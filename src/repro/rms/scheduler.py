@@ -346,6 +346,13 @@ class MalleableEasyPolicy(EasyBackfillPolicy):
                 continue
             end = now + max(runtime_estimate(j), 0.0)
             shrunk = j.nodes // max(j.factor, 2)
+            # A SERVING job negotiates on SLO pressure, not queue pressure:
+            # its DMR check only releases nodes when traffic ebbs, so the
+            # reservation must not bank on shrinking it (the grant may
+            # never come while the diurnal peak holds).
+            if j.serving:
+                releases.append((end, j.nodes))
+                continue
             if j.malleable and j.nodes > shrunk >= max(j.min_nodes, 1):
                 # Split, not duplicate: the shrinkable part frees at the
                 # next reconfig point, only the remainder at end of run.

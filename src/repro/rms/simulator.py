@@ -39,10 +39,11 @@ from repro.rms.engine import (CheckpointTick, ExpandTimeout, JobFinish,
                               JobSubmit, NodeDrain, NodeFail, NodeJoin,
                               NodePowerOff, NodePowerOn, PhaseChange,
                               ReconfigPoint, SimulationEngine,
-                              StragglerOnset, StragglerScan)
+                              StragglerOnset, StragglerScan, TrafficTick)
 from repro.rms.job import Job, JobState, clamp_band
 from repro.rms.policy import PolicyConfig, ReconfigPolicy
 from repro.rms.scheduler import MAX_PRIORITY, Scheduler, SchedulerConfig
+from repro.workload.traffic import TrafficGenerator
 
 
 @dataclasses.dataclass
@@ -55,6 +56,13 @@ class SimConfig:
     checkpoint_period_s: float = 120.0
     straggler_scan_s: float = 30.0
     straggler_threshold: float = 0.8
+    # SERVING class: latency-probe cadence and the SLO-pressure negotiation
+    # knobs — expand targets run at <= ``serving_headroom`` of capacity;
+    # shrink only when the smaller size still clears demand by
+    # ``serving_shrink_margin`` (hysteresis against diurnal flapping)
+    traffic_tick_s: float = 10.0
+    serving_headroom: float = 0.85
+    serving_shrink_margin: float = 1.3
     seed: int = 7
     policy: PolicyConfig = dataclasses.field(default_factory=PolicyConfig)
     sched: SchedulerConfig = dataclasses.field(default_factory=SchedulerConfig)
@@ -99,6 +107,9 @@ class SimReport:
     # every capacity-changing event (fail/drain/join/power cycle)
     capacity_timeline: List[Tuple[float, int, int]] = \
         dataclasses.field(default_factory=list)
+    # SERVING class: per-job (slo_violations, served_requests, p99_s)
+    serving_stats: Dict[int, Tuple[int, float, float]] = \
+        dataclasses.field(default_factory=dict)
 
     # -- aggregate measures (paper definitions) -----------------------------
 
@@ -160,6 +171,23 @@ class SimReport:
         return {j.job_id: (j.wait_time, j.exec_time, j.completion_time)
                 for j in self.jobs if j.state is JobState.COMPLETED}
 
+    # -- serving aggregates (SLO axis next to makespan/node-hours) ----------
+
+    def slo_violations(self) -> int:
+        """Total TrafficTick probes that found p99 above the job's SLO."""
+        return sum(v[0] for _, v in sorted(self.serving_stats.items()))
+
+    def served_requests(self) -> float:
+        """Total requests drained by serving jobs over the run."""
+        return sum(v[1] for _, v in sorted(self.serving_stats.items()))
+
+    def p99_latency(self) -> float:
+        """Worst per-job p99 queueing delay (seconds) across serving jobs —
+        the cluster violates the SLO iff its worst tenant does."""
+        if not self.serving_stats:
+            return 0.0
+        return max(v[2] for _, v in sorted(self.serving_stats.items()))
+
     def averages(self) -> Tuple[float, float, float]:
         m = list(self.job_metrics().values())
         if not m:
@@ -220,6 +248,25 @@ class ClusterSimulator:
         self._phase_epoch: Dict[int, int] = {}   # live phase prediction / job
         self._expand_epoch: Dict[int, int] = {}  # live expand waits / job
         self._wall_decide_s: List[float] = []
+        # SERVING class: one open-loop generator per serving job, plus the
+        # queueing state it drives.  ``work`` is pinned to the stream's
+        # total arrivals so the conservation invariant
+        # (arrivals == backlog + served) is exact by construction.
+        self._traffic: Dict[int, TrafficGenerator] = {}
+        self._traffic_seen: Dict[int, float] = {}   # arrivals accrued to t
+        self._backlog: Dict[int, float] = {}        # queued requests
+        self._slo_violations: Dict[int, int] = {}
+        self._p99_samples: Dict[int, List[float]] = {}
+        self._traffic_epoch: Dict[int, int] = {}    # live tick chain / job
+        for j in jobs:
+            if j.traffic is not None:
+                gen = TrafficGenerator(j.traffic)
+                self._traffic[j.job_id] = gen
+                j.work = gen.total()
+                self._traffic_seen[j.job_id] = j.traffic.t0
+                self._backlog[j.job_id] = 0.0
+                self._slo_violations[j.job_id] = 0
+                self._p99_samples[j.job_id] = []
         self._wire_handlers()
         self.sanitizer = None
         if config.sanitize or \
@@ -256,6 +303,8 @@ class ClusterSimulator:
         e.on(StragglerScan, lambda ev: self._on_straggler_scan(ev.job_id))
         e.on(CheckpointTick,
              lambda ev: self._on_checkpoint(ev.job_id, ev.epoch))
+        e.on(TrafficTick,
+             lambda ev: self._on_traffic_tick(ev.job_id, ev.epoch))
 
     def _app(self, job: Job) -> AppModel:
         return self.apps[job.app]
@@ -289,12 +338,45 @@ class ClusterSimulator:
     def _advance(self, job: Job):
         if job.state is not JobState.RUNNING:
             return
+        if job.traffic is not None:
+            self._serving_advance(job)
+            return
         t0 = max(job.last_progress_t, job.paused_until)
         if self.now > t0 >= 0:
             job.work_done = min(job.work,
                                 job.work_done + self._rate(job)
                                 * (self.now - t0))
         job.last_progress_t = max(self.now, job.paused_until)
+
+    def _serving_advance(self, job: Job):
+        """SERVING progress = request drain against an open-loop stream.
+
+        Arrivals accrue unconditionally (pauses and requeues cannot slow
+        the world down — the lazy catch-up from ``_traffic_seen`` covers
+        any gap); drain happens only over the unpaused interval, capped by
+        what the backlog holds.  ``work_done`` counts served requests, so
+        ``arrivals == backlog + work_done`` at all times (the sanitizer's
+        ``serving_conservation`` invariant).
+        """
+        jid = job.job_id
+        gen = self._traffic[jid]
+        seen = self._traffic_seen[jid]
+        if self.now > seen:
+            self._backlog[jid] += gen.arrivals_between(seen, self.now)
+            self._traffic_seen[jid] = self.now
+        t0 = max(job.last_progress_t, job.paused_until)
+        if self.now > t0 >= 0:
+            served = min(self._backlog[jid],
+                         self._rate(job) * (self.now - t0))
+            self._backlog[jid] -= served
+            job.work_done = min(job.work, job.work_done + served)
+        job.last_progress_t = max(self.now, job.paused_until)
+        # window over and drained: snap the float-drift remainder into
+        # served so completion is exact, not asymptotic
+        if self._traffic_seen[jid] >= job.traffic.end and \
+                self._backlog[jid] <= 1e-6 * max(job.work, 1.0):
+            self._backlog[jid] = 0.0
+            job.work_done = job.work
 
     def _pause(self, job: Job, seconds: float):
         self._advance(job)
@@ -305,6 +387,15 @@ class ClusterSimulator:
         job.completion_version += 1
         remaining = max(job.work - job.work_done, 0.0)
         t0 = max(self.now, job.paused_until)
+        if job.traffic is not None:
+            # a serving job cannot finish before its window closes, and the
+            # drain-rate estimate below is optimistic (arrivals keep
+            # coming) — _on_complete re-checks and refines, converging
+            # once ``now >= end`` because remaining == backlog then
+            t_end = max(t0 + remaining / self._rate(job), job.traffic.end)
+            self.engine.schedule(JobFinish(t_end, job.job_id,
+                                           job.completion_version))
+            return
         t_end = t0 + remaining / self._rate(job)
         self.engine.schedule(JobFinish(t_end, job.job_id,
                                        job.completion_version))
@@ -377,6 +468,23 @@ class ClusterSimulator:
         return out
 
     def _runtime_estimate(self, job: Job) -> float:
+        if job.traffic is not None:
+            # a serving job occupies nodes until its window closes plus
+            # whatever requests are left to drain; depends on (now, drain
+            # state) so it stays out of the memo below.  Outstanding work
+            # is counted from the arrival curve, not the accrued backlog:
+            # a job still PENDING after its window elapsed has zero
+            # backlog on the books but a full window of requests to
+            # serve, and an estimate of 0 makes reservation-based
+            # policies (conservative) carve empty profiles and
+            # over-allocate.
+            nodes = job.nodes or job.requested_nodes
+            gen = self._traffic[job.job_id]
+            outstanding = max(
+                gen.arrivals_until(min(self.now, job.traffic.end)) -
+                job.work_done, 0.0)
+            return max(job.traffic.end - self.now, 0.0) + \
+                outstanding / self._app_rate(job, nodes)
         # Memoized on the exact state the estimate depends on: work_done
         # only moves at _advance calls, so between events the same value
         # is requested hundreds of times by backfill priority sorts.
@@ -432,6 +540,13 @@ class ClusterSimulator:
                 self.engine.schedule(CheckpointTick(
                     self.now + self.config.checkpoint_period_s, job.job_id,
                     epoch))
+            if job.traffic is not None:
+                # New epoch: a tick chain surviving a requeue goes stale.
+                tepoch = self._traffic_epoch.get(job.job_id, 0) + 1
+                self._traffic_epoch[job.job_id] = tepoch
+                self.engine.schedule(TrafficTick(
+                    self.now + self.config.traffic_tick_s, job.job_id,
+                    tepoch))
         if starts or preempted:
             self._snapshot()
         # power management observes queue pressure after every pass; unmet
@@ -505,6 +620,10 @@ class ClusterSimulator:
         # a stale phase prediction must not fire against the restart
         self._phase_epoch[job.job_id] = \
             self._phase_epoch.get(job.job_id, 0) + 1
+        # a stale traffic-tick chain must not survive into the restart
+        if job.traffic is not None:
+            self._traffic_epoch[job.job_id] = \
+                self._traffic_epoch.get(job.job_id, 0) + 1
         self._sync_phase_to_work(job)
         job.record_nodes(self.now)
         self.actions.append(ActionRecord(
@@ -541,11 +660,71 @@ class ClusterSimulator:
 
     # -- the DMR check (paper §5) ----------------------------------------------
 
+    def _serving_demand(self, job: Job) -> Tuple[float, float]:
+        """(needed_rps, slo_pressure) for a serving job right now.
+
+        Demand = the live arrival rate plus the throughput required to
+        drain the current backlog within one SLO period; pressure is the
+        p99-vs-SLO ratio the negotiation reasons report (>= 1: violating).
+        """
+        jid = job.job_id
+        gen = self._traffic[jid]
+        backlog = self._backlog.get(jid, 0.0)
+        slo = max(job.traffic.slo_p99_s, 1e-9)
+        needed = gen.rate(self.now) + backlog / slo
+        rate = self._rate(job)
+        pressure = (backlog / rate) / slo if rate > 0 else float("inf")
+        return needed, pressure
+
+    def _serving_target(self, job: Job, needed: float) -> int:
+        """Smallest factor-ladder size in the band whose throughput covers
+        ``needed`` req/s at ``serving_headroom`` occupancy."""
+        lo = max(job.min_nodes, 1)
+        hi = max(job.max_nodes, lo)
+        f = max(job.factor, 2)
+        n = lo
+        while n < hi:
+            if self._app_rate(job, n) * self.config.serving_headroom \
+                    >= needed:
+                return n
+            n = min(n * f, hi)
+        return hi
+
+    def _serving_band(self, job: Job) -> Tuple[int, int, Optional[int],
+                                               float]:
+        """SLO-pressure band for the DMR check (§5.2 with a new driver).
+
+        Instead of remaining work, the serving job's announcement is
+        derived from queueing pressure: when the target size is above the
+        current one the job *requests* an expansion (step-capped to the
+        adjacent factor size so mode-1 negotiation always has a legal
+        step); when traffic ebbs enough that the next step down still
+        clears demand by ``serving_shrink_margin`` it offers the nodes
+        back; otherwise it holds (preferred = current).
+        """
+        needed, pressure = self._serving_demand(job)
+        cur = job.nodes
+        lo, hi = max(job.min_nodes, 1), max(job.max_nodes, 1)
+        target = self._serving_target(job, needed)
+        if target > cur:
+            return min(target, cur * max(job.factor, 2)), hi, None, pressure
+        down = max(cur // max(job.factor, 2), lo)
+        if down < cur and self._app_rate(job, down) * \
+                self.config.serving_headroom >= \
+                needed * self.config.serving_shrink_margin:
+            return lo, down, None, pressure
+        return lo, hi, cur, pressure
+
     def _decide(self, job: Job) -> Tuple[Decision, float]:
         app = self._app(job)
-        # EVOLVING jobs negotiate over their *live* band (rewritten by the
-        # PhaseChange handler); fixed-demand jobs keep the app model's.
-        if job.evolving:
+        # SERVING jobs negotiate on SLO pressure (backlog / capacity), not
+        # remaining work; EVOLVING jobs negotiate over their *live* band
+        # (rewritten by the PhaseChange handler); fixed-demand jobs keep
+        # the app model's.
+        pressure = None
+        if job.serving:
+            lo, hi, pref, pressure = self._serving_band(job)
+        elif job.evolving:
             lo, hi, pref = job.min_nodes, job.max_nodes, job.preferred
         else:
             lo, hi, pref = app.min_nodes, app.max_nodes, app.preferred
@@ -553,7 +732,7 @@ class ClusterSimulator:
         decision = self.policy.decide(
             self.cluster, self._pending_jobs(), job,
             minimum=lo, maximum=hi,
-            factor=job.factor, preferred=pref)
+            factor=job.factor, preferred=pref, slo_pressure=pressure)
         wall = _time.perf_counter() - wall0  # real policy latency (measured)
         self._wall_decide_s.append(wall)
         nodes_involved = max(job.nodes, decision.new_slices)
@@ -732,6 +911,34 @@ class ClusterSimulator:
         self.engine.schedule(CheckpointTick(
             self.now + self.config.checkpoint_period_s, job_id, epoch))
 
+    def _on_traffic_tick(self, job_id: int, epoch: int):
+        """SERVING latency probe: accrue arrivals, drain, sample p99.
+
+        The p99 proxy is the time to drain the current backlog at the
+        current allocation — the queueing delay the *next* arriving
+        request would see.  The chain re-arms itself while the job runs;
+        the epoch guard retires a chain left over from a prior start
+        (same pattern as ReconfigPoint/CheckpointTick).
+        """
+        job = self._by_id.get(job_id)
+        if job is None or job.state is not JobState.RUNNING or \
+                epoch != self._traffic_epoch.get(job_id, 0):
+            return
+        self._advance(job)
+        rate = self._rate(job)
+        backlog = self._backlog.get(job_id, 0.0)
+        p99 = backlog / rate if rate > 0 else float("inf")
+        self._p99_samples[job_id].append(p99)
+        if p99 > job.traffic.slo_p99_s:
+            self._slo_violations[job_id] += 1
+        if job.work_done >= job.work - 1e-9:
+            # window over and drained (the _serving_advance snap fired):
+            # finalize now instead of waiting for the estimate to land
+            self._schedule_completion(job)
+            return
+        self.engine.schedule(TrafficTick(
+            self.now + self.config.traffic_tick_s, job_id, epoch))
+
     def _on_phase_change(self, ev: PhaseChange):
         """EVOLVING (§2): the application enters its next phase.
 
@@ -791,10 +998,13 @@ class ClusterSimulator:
             return
         job = self._by_id[owner]
         self._advance(job)
-        job.work_done = self._ckpt_work.get(job.job_id, 0.0)  # ckpt restore
-        # the restore may rewind into an earlier phase: the live band (and
-        # the min-nodes test below) must reflect the phase being resumed
-        self._sync_phase_to_work(job)
+        if job.traffic is None:
+            # ckpt restore — serving jobs never rewind: a served request
+            # cannot be un-served, only the backlog re-queues
+            job.work_done = self._ckpt_work.get(job.job_id, 0.0)
+            # the restore may rewind into an earlier phase: the live band
+            # (and the min-nodes test below) must reflect the resumed phase
+            self._sync_phase_to_work(job)
         survivors = self.cluster.allocation(job.job_id)
         # live band floor: for evolving jobs the current phase's minimum,
         # not the submission-time envelope (identical for fixed-demand jobs)
@@ -987,4 +1197,11 @@ class ClusterSimulator:
                         makespan, _time.perf_counter() - wall0,
                         capacity_timeline=self.capacity_timeline)
         rep.policy_wall_s = list(self._wall_decide_s)
+        for jid in sorted(self._traffic):
+            samples = self._p99_samples[jid]
+            p99 = float(np.percentile(np.asarray(samples), 99)) \
+                if samples else 0.0
+            rep.serving_stats[jid] = (
+                self._slo_violations[jid],
+                self._by_id[jid].work_done, p99)
         return rep

@@ -11,13 +11,21 @@ Artifact schema (``SCHEMA_ID``/``SCHEMA_VERSION``): a JSON object
 
 .. code-block:: json
 
-    {"schema": "repro.rms.sweep", "version": 4,
+    {"schema": "repro.rms.sweep", "version": 5,
      "grid": {"traces": [...], "policies": [...],
-              "mixes": [[r,m,f,e], ...]},
+              "mixes": [[r,m,f,e,s], ...]},
      "results": [{"trace": ..., "policy": ..., "rigid": ...,
                   "calibration_id": "paper-fit", "churn": "", ...}]}
 
-Schema v4 (this version) adds the elastic-capacity columns: ``churn``
+Schema v5 (this version) adds the SERVING job class: mixes widen to five
+fractions — ``(rigid, moldable, malleable, evolving, serving)`` — and
+rows carry the SLO axis next to makespan/node-hours: ``slo_violations``
+(TrafficTick probes above the SLO), ``p99_latency`` (worst per-job p99
+queueing delay, seconds) and ``served_requests`` (total request drain).
+Pre-serving artifacts auto-upgrade with ``serving=0.0`` and zeroed
+serving metrics, which is exactly what a fresh run of the same grid
+produces — the existing golden files stay valid as v4 on disk.
+Schema v4 added the elastic-capacity columns: ``churn``
 (the named :data:`repro.rms.capacity.CHURN_SCENARIOS` drain/join/power
 schedule the row ran under, ``""`` for a fixed cluster), ``node_hours``
 (integral of live capacity over the run — the cost axis next to
@@ -74,35 +82,46 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.calib.artifact import PAPER_FIT_ID
 
 SCHEMA_ID = "repro.rms.sweep"
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 ROUND_DIGITS = 6
 
 #: Fixed CSV column order — the row schema, version ``SCHEMA_VERSION``.
 COLUMNS = ("trace", "policy", "rigid", "moldable", "malleable", "evolving",
+           "serving",
            "flexible", "scheduling", "num_nodes", "seed", "time_scale",
            "calibration_id", "churn", "jobs", "completed", "makespan_s",
            "util_avg_pct", "util_std_pct", "avg_wait_s", "avg_exec_s",
            "avg_completion_s", "node_hours", "powered_off_hours",
            "expands", "shrinks", "preempts", "requeues",
            "timeouts", "phase_changes", "drains", "joins", "power_offs",
-           "power_ons")
+           "power_ons", "slo_violations", "p99_latency", "served_requests")
 
 #: Default smoke grid (2 policies × 3 mixes) — also the golden-artifact grid.
 SMOKE_POLICIES = ("easy", "sjf")
-SMOKE_MIXES = ((0.0, 0.0, 1.0, 0.0), (0.5, 0.25, 0.25, 0.0),
-               (0.25, 0.15, 0.3, 0.3))
+SMOKE_MIXES = ((0.0, 0.0, 1.0, 0.0, 0.0), (0.5, 0.25, 0.25, 0.0, 0.0),
+               (0.25, 0.15, 0.3, 0.3, 0.0))
 
-Mix = Tuple[float, float, float, float]
+#: Serving smoke grid (``--smoke --serving``): batch-vs-serving
+#: co-scheduling mixes behind ``tests/data/golden_serving_sweep.json``.
+#: ``preempt`` may shrink serving jobs for the batch head (the makespan
+#: side of the trade-off); ``easy`` leaves them to SLO negotiation.
+SMOKE_SERVING_POLICIES = ("easy", "preempt")
+SMOKE_SERVING_MIXES = ((0.0, 0.0, 0.7, 0.0, 0.3),
+                       (0.25, 0.0, 0.25, 0.2, 0.3),
+                       (0.0, 0.0, 0.4, 0.0, 0.6))
+
+Mix = Tuple[float, float, float, float, float]
 
 
 def norm_mix(mix: Sequence[float]) -> Mix:
-    """Normalize a 3- or 4-tuple mix to ``(rigid, moldable, malleable,
-    evolving)`` — 3-tuples are pre-v2 and carry no evolving share."""
+    """Normalize a 3-/4-/5-tuple mix to ``(rigid, moldable, malleable,
+    evolving, serving)`` — shorter tuples are pre-v2/pre-v5 and carry no
+    evolving/serving share."""
     vals = tuple(float(x) for x in mix)
-    if len(vals) == 3:
-        return vals + (0.0,)
-    if len(vals) != 4:
-        raise ValueError(f"mix needs 3 or 4 fractions, got {mix!r}")
+    if len(vals) in (3, 4):
+        return vals + (0.0,) * (5 - len(vals))
+    if len(vals) != 5:
+        raise ValueError(f"mix needs 3, 4 or 5 fractions, got {mix!r}")
     return vals
 
 
@@ -115,7 +134,7 @@ class SweepPoint:
     """
     trace: str
     policy: str
-    mix: Tuple[float, ...]     # (rigid, moldable, malleable[, evolving])
+    mix: Tuple[float, ...]  # (rigid, moldable, malleable[, evolving[, serving]])
     flexible: bool = True
     num_nodes: int = 64
     seed: int = 7
@@ -198,6 +217,7 @@ def report_row(report, *, trace: str, policy: str,
         "moldable": round(mix[1], ROUND_DIGITS),
         "malleable": round(mix[2], ROUND_DIGITS),
         "evolving": round(mix[3], ROUND_DIGITS),
+        "serving": round(mix[4], ROUND_DIGITS),
         "flexible": bool(flexible), "scheduling": scheduling,
         # provenance column: the *configured* initial capacity of the
         # point, not a denominator
@@ -215,6 +235,10 @@ def report_row(report, *, trace: str, policy: str,
         "node_hours": round(float(report.node_hours()), ROUND_DIGITS),
         "powered_off_hours": round(float(report.powered_off_hours()),
                                    ROUND_DIGITS),
+        "slo_violations": int(report.slo_violations()),
+        "p99_latency": round(float(report.p99_latency()), ROUND_DIGITS),
+        "served_requests": round(float(report.served_requests()),
+                                 ROUND_DIGITS),
     }
     row.update(_action_counts(report.actions))
     return row
@@ -229,7 +253,7 @@ def run_point(point: SweepPoint) -> Dict[str, object]:
 
     m = norm_mix(point.mix)
     mix = MalleabilityMix(rigid=m[0], moldable=m[1], malleable=m[2],
-                          evolving=m[3])
+                          evolving=m[3], serving=m[4])
     trace = parse_swf(point.trace)
     jobs, apps = jobs_from_swf(trace, num_nodes=point.num_nodes, mix=mix,
                                seed=point.seed, max_jobs=point.max_jobs,
@@ -264,6 +288,7 @@ def row_key(row: Dict[str, object]) -> Tuple:
     completion order."""
     return (row["trace"], row["policy"], row["rigid"], row["moldable"],
             row["malleable"], row.get("evolving", 0.0),
+            row.get("serving", 0.0),
             not row["flexible"], row["scheduling"],
             row["num_nodes"], row["seed"], row["time_scale"],
             row.get("calibration_id", PAPER_FIT_ID),
@@ -298,6 +323,7 @@ def point_journal_key(point: SweepPoint) -> str:
     return json.dumps((point.label, point.policy,
                        round(m[0], ROUND_DIGITS), round(m[1], ROUND_DIGITS),
                        round(m[2], ROUND_DIGITS), round(m[3], ROUND_DIGITS),
+                       round(m[4], ROUND_DIGITS),
                        not point.flexible, point.scheduling,
                        point.num_nodes, point.seed,
                        round(point.time_scale, ROUND_DIGITS),
@@ -454,6 +480,22 @@ def _upgrade_v3(doc: Dict[str, object]) -> Dict[str, object]:
         row.setdefault("powered_off_hours", 0.0)
         for col in ("drains", "joins", "power_offs", "power_ons"):
             row.setdefault(col, 0)
+    doc["version"] = 4
+    return doc
+
+
+def _upgrade_v4(doc: Dict[str, object]) -> Dict[str, object]:
+    """In-place v4 → v5: pre-serving artifacts carry a zero serving
+    fraction and no serving traffic, so every SLO metric is zero —
+    exactly what a fresh v5 run of the same grid produces."""
+    for row in doc.get("results", []):
+        row.setdefault("serving", 0.0)
+        row.setdefault("slo_violations", 0)
+        row.setdefault("p99_latency", 0.0)
+        row.setdefault("served_requests", 0.0)
+    grid = doc.get("grid") or {}
+    if "mixes" in grid:
+        grid["mixes"] = [list(norm_mix(m)) for m in grid["mixes"]]
     doc["version"] = SCHEMA_VERSION
     return doc
 
@@ -472,6 +514,9 @@ def load_artifact(path: str) -> Dict[str, object]:
         version = doc["version"]
     if version == 3:
         doc = _upgrade_v3(doc)
+        version = doc["version"]
+    if version == 4:
+        doc = _upgrade_v4(doc)
         version = doc["version"]
     if version != SCHEMA_VERSION:
         raise ValueError(f"sweep artifact version {version} != "
@@ -504,8 +549,9 @@ def write_csv(path: str, rows: Sequence[Dict[str, object]]) -> None:
 
 def winners_by_mix(rows: Sequence[Dict[str, object]],
                    metric: str = "makespan_s") -> Dict[Tuple, str]:
-    """Per ``(trace, rigid, moldable, malleable, evolving)``: the policy
-    minimizing ``metric`` (ties broken by policy name for determinism).
+    """Per ``(trace, rigid, moldable, malleable, evolving, serving)``: the
+    policy minimizing ``metric`` (ties broken by policy name for
+    determinism).
 
     The key must include the trace: keying by mix alone collapsed a
     multi-trace sweep into one winner table, silently crowning whichever
@@ -514,7 +560,8 @@ def winners_by_mix(rows: Sequence[Dict[str, object]],
     best: Dict[Tuple, Tuple[float, str]] = {}
     for row in rows:
         key = (str(row.get("trace", "")), row["rigid"], row["moldable"],
-               row["malleable"], row.get("evolving", 0.0))
+               row["malleable"], row.get("evolving", 0.0),
+               row.get("serving", 0.0))
         cand = (float(row[metric]), str(row["policy"]))
         if key not in best or cand < best[key]:
             best[key] = cand
@@ -526,17 +573,20 @@ def winners_by_mix(rows: Sequence[Dict[str, object]],
 # ---------------------------------------------------------------------------
 
 def smoke_grid(trace: str, *, num_nodes: int = 64, seed: int = 7,
-               churn: Optional[str] = None
+               churn: Optional[str] = None, serving: bool = False
                ) -> Tuple[List[SweepPoint], Dict[str, object]]:
     """The tiny deterministic grid behind ``--smoke`` and the golden
     artifacts (``tests/data/golden_sweep.json``; with ``churn="smoke"``,
-    ``tests/data/golden_capacity_sweep.json``) — keep the two in sync by
+    ``tests/data/golden_capacity_sweep.json``; with ``serving=True``,
+    ``tests/data/golden_serving_sweep.json``) — keep them in sync by
     construction."""
-    points = build_grid([trace], SMOKE_POLICIES, SMOKE_MIXES, (True,),
+    policies = SMOKE_SERVING_POLICIES if serving else SMOKE_POLICIES
+    mixes = SMOKE_SERVING_MIXES if serving else SMOKE_MIXES
+    points = build_grid([trace], policies, mixes, (True,),
                         num_nodes=num_nodes, seed=seed, churn=churn)
     grid = {"traces": [os.path.basename(trace)],
-            "policies": list(SMOKE_POLICIES),
-            "mixes": [list(m) for m in SMOKE_MIXES],
+            "policies": list(policies),
+            "mixes": [list(norm_mix(m)) for m in mixes],
             "flexibles": [True], "num_nodes": num_nodes, "seed": seed}
     if churn:
         grid["churn"] = churn
@@ -544,13 +594,14 @@ def smoke_grid(trace: str, *, num_nodes: int = 64, seed: int = 7,
 
 
 def parse_mixes(spec: str) -> List[Mix]:
-    """``"0:0:1,0.2:0.1:0.4:0.3"`` -> 4-tuples; 3-field specs are pre-v2
-    and get a zero evolving share."""
+    """``"0:0:1,0.2:0.1:0.4:0.3"`` -> 5-tuples; 3-/4-field specs are
+    pre-v2/pre-v5 and get zero evolving/serving shares."""
     mixes = []
     for part in spec.split(","):
         vals = tuple(float(x) for x in part.strip().split(":"))
-        if len(vals) not in (3, 4):
-            raise ValueError(f"mix needs rigid:moldable:malleable[:evolving],"
+        if len(vals) not in (3, 4, 5):
+            raise ValueError(f"mix needs "
+                             f"rigid:moldable:malleable[:evolving[:serving]],"
                              f" got {part!r}")
         mixes.append(norm_mix(vals))
     return mixes
@@ -594,6 +645,9 @@ def main(argv=None) -> int:
                          "later with --resume")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny fixed grid (the golden-artifact grid)")
+    ap.add_argument("--serving", action="store_true",
+                    help="with --smoke: the serving co-scheduling grid "
+                         "(tests/data/golden_serving_sweep.json)")
     ap.add_argument("--out", default=None, help="write JSON artifact here")
     ap.add_argument("--csv", default=None, help="write CSV artifact here")
     ap.add_argument("--check", default=None,
@@ -621,8 +675,13 @@ def main(argv=None) -> int:
             ap.error("--smoke is the fixed paper-fit golden grid; "
                      "run a calibrated sweep without --smoke")
         points, grid = smoke_grid(traces[0], num_nodes=args.nodes,
-                                  seed=args.seed, churn=args.churn)
+                                  seed=args.seed, churn=args.churn,
+                                  serving=args.serving)
     else:
+        if args.serving:
+            ap.error("--serving selects the serving smoke grid; without "
+                     "--smoke, put a serving share in --mixes "
+                     "(rigid:moldable:malleable:evolving:serving)")
         policies = [p.strip() for p in args.policies.split(",") if p.strip()]
         mixes = parse_mixes(args.mixes)
         flexibles = (False, True) if args.fixed else (True,)

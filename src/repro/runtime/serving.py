@@ -45,6 +45,10 @@ class Server:
         return [i for i in range(self.batch) if i not in used]
 
     def add(self, req: Request) -> bool:
+        if len(req.prompt) > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt length {len(req.prompt)} "
+                f"exceeds the KV cache (max_len={self.max_len})")
         slots = self.free_slots()
         if not slots:
             return False
@@ -90,7 +94,11 @@ class Server:
             req.out.append(nxt)
             self.pos[slot] += 1
             emitted[rid] = nxt
-            if len(req.out) >= req.max_new_tokens:
+            # finish on budget, or evict when the next decode position
+            # would fall outside the KV cache — the sequence ends early
+            # rather than writing past max_len
+            if len(req.out) >= req.max_new_tokens or \
+                    self.pos[slot] >= self.max_len:
                 del self.active[rid]
                 del self.slot_of[rid]
         return emitted

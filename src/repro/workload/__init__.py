@@ -1,12 +1,16 @@
-"""Workload generation (Feitelson model, Poisson arrivals, SWF replay)."""
+"""Workload generation (Feitelson model, Poisson arrivals, SWF replay,
+open-loop serving traffic)."""
 from repro.workload.feitelson import (evolving_phases_for, feitelson_sizes,
                                       make_workload, poisson_arrivals)
 from repro.workload.swf import (EVOLVING, MALLEABLE, MOLDABLE, RIGID,
-                                MalleabilityMix, SWFJob, SWFTrace,
+                                SERVING, MalleabilityMix, SWFJob, SWFTrace,
                                 annotate_malleability, clamp_band,
                                 jobs_from_swf, parse_swf)
+from repro.workload.traffic import (DiurnalCurve, TrafficGenerator,
+                                    TrafficSpec)
 
 __all__ = ["evolving_phases_for", "feitelson_sizes", "make_workload",
            "poisson_arrivals", "SWFJob", "SWFTrace", "MalleabilityMix",
            "annotate_malleability", "clamp_band", "jobs_from_swf",
-           "parse_swf", "RIGID", "MOLDABLE", "MALLEABLE", "EVOLVING"]
+           "parse_swf", "RIGID", "MOLDABLE", "MALLEABLE", "EVOLVING",
+           "SERVING", "DiurnalCurve", "TrafficGenerator", "TrafficSpec"]

@@ -40,6 +40,8 @@ import numpy as np
 
 from repro.rms.costmodel import AppModel
 from repro.rms.job import Job, JobPhase, clamp_band
+from repro.workload.traffic import (DiurnalCurve, TrafficGenerator,
+                                    TrafficSpec)
 
 #: SWF field indices (0-based), per the Parallel Workloads Archive spec.
 _FIELDS = ("job_id", "submit_time", "wait_time", "run_time",
@@ -50,6 +52,7 @@ _FIELDS = ("job_id", "submit_time", "wait_time", "run_time",
 
 RIGID, MOLDABLE, MALLEABLE, EVOLVING = ("rigid", "moldable", "malleable",
                                         "evolving")
+SERVING = "serving"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -164,22 +167,26 @@ def parse_swf(source: Union[str, Iterable[str]], *,
 
 @dataclasses.dataclass(frozen=True)
 class MalleabilityMix:
-    """Fractions annotated rigid / moldable / malleable / evolving."""
+    """Fractions annotated rigid / moldable / malleable / evolving /
+    serving."""
     rigid: float = 0.0
     moldable: float = 0.0
     malleable: float = 1.0
     evolving: float = 0.0
+    serving: float = 0.0
 
     def __post_init__(self):
-        total = self.rigid + self.moldable + self.malleable + self.evolving
+        total = (self.rigid + self.moldable + self.malleable
+                 + self.evolving + self.serving)
         if abs(total - 1.0) > 1e-9:
             raise ValueError(f"fractions must sum to 1, got {total}")
         if min(self.rigid, self.moldable, self.malleable,
-               self.evolving) < 0:
+               self.evolving, self.serving) < 0:
             raise ValueError("fractions must be non-negative")
 
-    def as_tuple(self) -> Tuple[float, float, float, float]:
-        return (self.rigid, self.moldable, self.malleable, self.evolving)
+    def as_tuple(self) -> Tuple[float, float, float, float, float]:
+        return (self.rigid, self.moldable, self.malleable, self.evolving,
+                self.serving)
 
 
 def annotate_malleability(jobs: Sequence[SWFJob],
@@ -189,8 +196,9 @@ def annotate_malleability(jobs: Sequence[SWFJob],
 
     Uses a seeded permutation + exact quota split (not per-job coin flips)
     so the realised fractions match the requested ones to within one job.
-    The quota layout keeps rigid/moldable slots where they were before the
-    evolving class existed, so 3-way mixes reproduce their historic
+    The quota layout keeps earlier classes' slots where they were before
+    each later class existed (serving slots come after evolving, before
+    the malleable fill), so 3- and 4-way mixes reproduce their historic
     assignment exactly.
     """
     mix = MalleabilityMix() if mix is None else mix
@@ -198,8 +206,11 @@ def annotate_malleability(jobs: Sequence[SWFJob],
     n_rigid = min(int(round(mix.rigid * n)), n)
     n_mold = min(int(round(mix.moldable * n)), n - n_rigid)
     n_evol = min(int(round(mix.evolving * n)), n - n_rigid - n_mold)
+    n_serv = min(int(round(mix.serving * n)),
+                 n - n_rigid - n_mold - n_evol)
     kinds = ([RIGID] * n_rigid + [MOLDABLE] * n_mold + [EVOLVING] * n_evol
-             + [MALLEABLE] * (n - n_rigid - n_mold - n_evol))
+             + [SERVING] * n_serv
+             + [MALLEABLE] * (n - n_rigid - n_mold - n_evol - n_serv))
     rng = np.random.default_rng(seed)
     perm = rng.permutation(n)
     out = [""] * n
@@ -246,6 +257,27 @@ def _evolving_phases(rec: SWFJob, iterations: int, base: int, cap: int,
     return tuple(phases)
 
 
+def _serving_spec(rec: SWFJob, app: AppModel, seed: int) -> TrafficSpec:
+    """Deterministic request stream for a SERVING trace job.
+
+    The window is the job's recorded lifetime; the mean arrival rate sits
+    at 60% of the recorded-size throughput with a ±50% diurnal swing
+    compressed so two full cycles fit inside the window — peaks push
+    occupancy through the DMR headroom (forcing SLO expands), ebbs drop
+    it far enough that the negotiation hands nodes back to the batch
+    queue.  Pure arithmetic on ``(workload seed, record id)``.
+    """
+    duration = max(rec.run_time, 1.0)
+    period = max(duration / 2.0, 1.0)
+    curve = DiurnalCurve(
+        base_rps=0.6 * app.rate(app.preferred), amplitude=0.5,
+        period_s=period, phase_s=period * (rec.job_id % 8) / 8.0)
+    return TrafficSpec(
+        curve=curve, seed=seed * 100003 + rec.job_id,
+        t0=rec.submit_time, duration_s=duration, slo_p99_s=2.0,
+        bucket_s=max(min(60.0, duration / 8.0), 1.0))
+
+
 def _trace_app(rec: SWFJob, kind: str, num_nodes: int,
                serial_frac: float, data_bytes_per_node: int) -> AppModel:
     """Amdahl model calibrated so exec at the recorded size = run_time.
@@ -272,6 +304,13 @@ def _trace_app(rec: SWFJob, kind: str, num_nodes: int,
         min_nodes, max_nodes, preferred = clamp_band(
             max(base // 4, 1), base * 2, base, cap)
         period = 0.0
+    elif kind == SERVING:
+        # Wide elastic band around the recorded size: the SLO-pressure
+        # negotiation rides the diurnal curve across it.
+        base = _pow2_at_most(size)
+        min_nodes, max_nodes, preferred = clamp_band(
+            max(base // 4, 1), base * 4, base, cap)
+        period = 15.0
     elif kind == EVOLVING:
         base = _pow2_at_most(size)
         phases = _evolving_phases(rec, iterations, base, cap, serial_frac,
@@ -328,7 +367,7 @@ def jobs_from_swf(trace: Union[SWFTrace, Sequence[SWFJob]], *,
                          data_bytes_per_node)
         apps[app.name] = app
         start_nodes = (app.preferred if kind in (MALLEABLE, MOLDABLE,
-                                                 EVOLVING)
+                                                 EVOLVING, SERVING)
                        else app.max_nodes)
         # An evolving job's *live* band starts at phase 0 (the app model
         # keeps the envelope); the PhaseChange handler rewrites it per phase.
@@ -337,13 +376,21 @@ def jobs_from_swf(trace: Union[SWFTrace, Sequence[SWFJob]], *,
             band = (ph0.min_nodes, ph0.max_nodes, ph0.preferred)
         else:
             band = (app.min_nodes, app.max_nodes, app.preferred)
+        # A serving job's work is its stream's total arrivals (requests),
+        # not the calibrated iteration count.
+        spec = None
+        work = float(app.iterations)
+        if kind == SERVING:
+            spec = _serving_spec(scaled, app, seed)
+            work = TrafficGenerator(spec).total()
         jobs.append(Job(
             job_id=i, app=app.name, submit_time=float(scaled.submit_time),
-            work=float(app.iterations),
+            work=work,
             min_nodes=band[0], max_nodes=band[1],
             preferred=band[2], factor=2,
-            malleable=(kind in (MALLEABLE, EVOLVING)),
+            malleable=(kind in (MALLEABLE, EVOLVING, SERVING)),
             check_period_s=app.check_period_s,
             requested_nodes=start_nodes, data_bytes=app.data_bytes,
-            user=max(int(rec.user_id), 0), phases=app.phases))
+            user=max(int(rec.user_id), 0), phases=app.phases,
+            traffic=spec))
     return jobs, apps

@@ -380,7 +380,8 @@ def test_churn_sweep_row_matches_golden_artifact(tmp_path):
     points, _ = sweep.smoke_grid(os.path.join(DATA, "sample.swf"),
                                  churn="smoke")
     point = next(p for p in points
-                 if p.policy == "easy" and p.mix == (0.0, 0.0, 1.0, 0.0))
+                 if p.policy == "easy" and
+                 p.mix == (0.0, 0.0, 1.0, 0.0, 0.0))
     row = sweep.run_point(point)
     assert row["churn"] == "smoke"
     assert row["drains"] > 0 and row["joins"] > 0

@@ -330,6 +330,6 @@ def test_winner_table_ordering_is_deterministic():
     ]
     winners = winners_by_mix(rows)
     assert list(winners) == sorted(winners)
-    assert winners[("a", 0.0, 0.0, 1.0, 0.0)] == "sjf"
+    assert winners[("a", 0.0, 0.0, 1.0, 0.0, 0.0)] == "sjf"
     assert winners == winners_by_mix(list(reversed(rows)))
     assert list(winners) == list(winners_by_mix(list(reversed(rows))))

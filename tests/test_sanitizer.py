@@ -14,10 +14,15 @@ exactly the violated invariant:
 5. inverting a phase band on application -> ``band_order``
 6. scheduling a completion without bumping the version
    -> ``completion_version``
+7. leaking serving backlog on a preemption shrink
+   -> ``serving_conservation``
+8. reusing a stale traffic-tick epoch after a serving requeue
+   -> ``duplicate_check_chain``
 
 Plus the clean-mode contract: a sanitized run of the capacity-churn
 golden scenario reports zero violations and produces byte-identical
-artifacts to the unsanitized run.
+artifacts to the unsanitized run, and the fairshare shadow ledger stays
+in agreement through a serving job's SLO-driven resizes.
 """
 import dataclasses
 import json
@@ -32,6 +37,7 @@ from repro.rms.costmodel import AppModel
 from repro.rms.sanitizer import SanitizerError, SimSanitizer
 from repro.rms.scheduler import FairSharePolicy, SchedulerConfig
 from repro.rms.simulator import ClusterSimulator, SimConfig
+from repro.workload.traffic import DiurnalCurve, TrafficSpec
 
 
 def make_app(name, lo, hi, preferred=None, check_period_s=15.0, phases=()):
@@ -50,6 +56,29 @@ def make_job(n, *, lo=None, hi=None, work=400.0, submit=0.0, job_id=0,
                malleable=malleable, check_period_s=15.0,
                requested_nodes=n, data_bytes=1 << 20, user=user,
                phases=phases)
+
+
+def make_traffic(base_rps, *, duration=120.0, bursts=(), noise=0.0,
+                 amplitude=0.0, seed=5):
+    curve = DiurnalCurve(base_rps=base_rps, amplitude=amplitude,
+                         period_s=duration, phase_s=0.0,
+                         bursts=tuple(bursts))
+    return TrafficSpec(curve=curve, seed=seed, t0=0.0, duration_s=duration,
+                       slo_p99_s=2.0, bucket_s=30.0, noise=noise)
+
+
+def make_serving_job(n, spec, *, lo=2, hi=8, job_id=0, user=0):
+    return Job(job_id=job_id, app="api", submit_time=0.0, work=0.0,
+               min_nodes=lo, max_nodes=hi, preferred=n, factor=2,
+               malleable=True, check_period_s=5.0, requested_nodes=n,
+               data_bytes=1 << 20, user=user, traffic=spec)
+
+
+def make_serving_app(lo=2, hi=8):
+    # drains ~1 req/s per node (t1_iter_s=1, perfectly parallel)
+    return AppModel("api", iterations=1, t1_iter_s=1.0, serial_frac=0.0,
+                    data_bytes=1 << 20, min_nodes=lo, max_nodes=hi,
+                    preferred=None, check_period_s=5.0)
 
 
 def run_sanitized(jobs, cfg, apps):
@@ -204,6 +233,72 @@ def test_catches_missing_completion_version_bump(monkeypatch):
 
 
 # ---------------------------------------------------------------------------
+# Mutation 7: serving backlog leaks on a preemption shrink
+# ---------------------------------------------------------------------------
+
+def test_catches_serving_backlog_leak_on_shrink(monkeypatch):
+    inner = ClusterSimulator._apply_preemption
+
+    def leaky_preempt(self, job, new):
+        inner(self, job, new)
+        if job.traffic is not None and new > 0:
+            self._backlog[job.job_id] *= 0.5   # bug: requests vanish
+
+    monkeypatch.setattr(ClusterSimulator, "_apply_preemption",
+                        leaky_preempt)
+    # Sustained overload (10 rps vs 8 nodes x 1 rps) piles up backlog;
+    # the 6-node batch head submitted at t=10 outranks the serving job
+    # (size bias beats 10 s of age) and its reservation slips past the
+    # grace window, so the preempt policy shrinks the serving job 8 -> 4
+    # mid-backlog.  The leak breaks arrivals == backlog + served at the
+    # very next checked event.
+    spec = make_traffic(10.0, duration=300.0)
+    serving = make_serving_job(8, spec)
+    head = make_job(6, submit=10.0, job_id=1, work=150.0)
+    cfg = SimConfig(num_nodes=10, flexible=True, sanitize=True,
+                    sched=SchedulerConfig(policy="preempt"))
+    sim = ClusterSimulator([serving, head], cfg,
+                           apps={"api": make_serving_app(),
+                                 "app": make_app("app", 6, 6)})
+    with pytest.raises(SanitizerError) as err:
+        sim.run()
+    assert err.value.invariant == "serving_conservation"
+    assert "arrivals" in err.value.detail
+
+
+# ---------------------------------------------------------------------------
+# Mutation 8: serving requeue leaves the traffic-tick chain epoch live
+# ---------------------------------------------------------------------------
+
+def test_catches_stale_traffic_tick_chain_after_requeue(monkeypatch):
+    inner = ClusterSimulator._requeue
+
+    def stale_tick_requeue(self, job, action, from_nodes, reason):
+        inner(self, job, action, from_nodes, reason)
+        if job.traffic is not None:
+            # bug: roll back both the requeue bump and (pre-compensating)
+            # the restart's bump, so the restarted TrafficTick chain
+            # re-derives the epoch of the still-pending old chain
+            self._traffic_epoch[job.job_id] -= 2
+
+    monkeypatch.setattr(ClusterSimulator, "_requeue", stale_tick_requeue)
+    # min == nodes: the t=7 failure forces a requeue before the first
+    # traffic tick (t=10) fires; survivors let the restart happen within
+    # the same event, scheduling a second tick chain under the stale
+    # epoch — two live chains for one job.
+    spec = make_traffic(2.0)
+    serving = make_serving_job(4, spec, lo=4, hi=4)
+    cfg = SimConfig(num_nodes=8, flexible=True, sanitize=True,
+                    failures=((7.0, 0),))
+    sim = ClusterSimulator([serving], cfg,
+                           apps={"api": make_serving_app(4, 4)})
+    with pytest.raises(SanitizerError) as err:
+        sim.run()
+    assert err.value.invariant == "duplicate_check_chain"
+    assert "traffic" in err.value.detail
+
+
+# ---------------------------------------------------------------------------
 # Clean mode: zero violations, byte-identical artifacts
 # ---------------------------------------------------------------------------
 
@@ -253,3 +348,25 @@ def test_fairshare_clean_run_under_sanitizer():
     sim.run()                      # no SanitizerError
     assert sim.sanitizer.checks > 0
     assert sim.scheduler.policy._usage    # billing actually happened
+
+
+def test_fairshare_clean_run_with_serving_resizes():
+    """The shadow ledger must also track a serving job through its
+    SLO-driven resizes: every expand/shrink changes the node-seconds
+    slope mid-flight, which is exactly where billing drift would hide.
+    Two users (serving vs batch) keep the fairshare penalty live."""
+    spec = make_traffic(2.5, duration=600.0, amplitude=0.2, noise=0.1,
+                        bursts=((90.0, 60.0, 6.0),))
+    jobs = [make_serving_job(4, spec, user=0),
+            make_job(2, work=100.0, submit=30.0, job_id=1, user=1),
+            make_job(4, work=50.0, submit=60.0, job_id=2, user=1)]
+    cfg = SimConfig(num_nodes=10, flexible=True,
+                    sched=SchedulerConfig(policy="fairshare"))
+    sim = run_sanitized(jobs, cfg,
+                        {"api": make_serving_app(),
+                         "app": make_app("app", 2, 4)})
+    assert sim.sanitizer.checks > 0
+    assert sim.scheduler.policy._usage
+    # the serving job actually resized under the sanitizer's eye
+    assert any(a.job_id == 0 and a.action in ("expand", "shrink")
+               for a in sim.actions)

@@ -3,6 +3,7 @@ import dataclasses
 
 import jax
 import numpy as np
+import pytest
 
 from repro.models import build_model, get_model, reduced_config
 from repro.runtime import Request, Server
@@ -35,3 +36,62 @@ def test_slots_are_reused():
                     max_new_tokens=2) for i in range(3)]
     done = server.run(reqs)
     assert len(done) == 3
+
+
+def test_slot_freed_on_completion_and_reassigned():
+    """The slot a finished request held must come back to free_slots and
+    be handed to the next request."""
+    server, cfg = make_server(batch=2)
+    rng = np.random.default_rng(2)
+    a = Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, 3),
+                max_new_tokens=1)
+    b = Request(rid=1, prompt=rng.integers(0, cfg.vocab_size, 3),
+                max_new_tokens=8)
+    assert server.add(a) and server.add(b)
+    slot_a = server.slot_of[0]
+    assert server.free_slots() == []
+    server.serve_step()                   # finishes a (1-token budget)
+    assert 0 not in server.active
+    assert server.free_slots() == [slot_a]
+    c = Request(rid=2, prompt=rng.integers(0, cfg.vocab_size, 3),
+                max_new_tokens=1)
+    assert server.add(c)
+    assert server.slot_of[2] == slot_a    # lowest free slot is recycled
+
+
+def test_free_slots_accounting():
+    server, cfg = make_server(batch=3)
+    rng = np.random.default_rng(3)
+    assert server.free_slots() == [0, 1, 2]
+    for i in range(3):
+        assert server.add(Request(rid=i,
+                                  prompt=rng.integers(0, cfg.vocab_size, 2),
+                                  max_new_tokens=4))
+        assert len(server.free_slots()) == 2 - i
+    assert not server.add(Request(rid=9,
+                                  prompt=rng.integers(0, cfg.vocab_size, 2)))
+    while server.active:
+        server.serve_step()
+    assert server.free_slots() == [0, 1, 2]
+
+
+def test_max_len_evicts_at_cache_end():
+    """A request whose decode reaches the end of the KV cache finishes
+    early instead of writing past max_len: with a 3-token prompt and an
+    8-entry cache the decode positions 2..7 emit exactly 6 tokens even
+    under a much larger token budget."""
+    server, cfg = make_server(batch=1, max_len=8)
+    rng = np.random.default_rng(4)
+    req = Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, 3),
+                  max_new_tokens=100)
+    done = server.run([req])
+    assert len(done[0]) == 8 - 3 + 1
+    assert server.free_slots() == [0]     # the slot came back
+
+
+def test_add_rejects_prompt_longer_than_cache():
+    server, cfg = make_server(batch=1, max_len=4)
+    rng = np.random.default_rng(5)
+    with pytest.raises(ValueError, match="max_len"):
+        server.add(Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, 5)))
+    assert server.free_slots() == [0]     # nothing was claimed

@@ -1,0 +1,180 @@
+"""SERVING job class end-to-end: SLO-driven malleability golden trace.
+
+A hand-built scenario locks the full serving story byte-for-byte
+(``tests/data/golden_serving_trace.json``): a diurnal burst drives the
+SLO negotiation to expand the serving job; a batch job submitted at the
+peak has to wait; when traffic ebbs the serving job releases nodes step
+by step and the batch job backfills into them — the co-scheduling
+dynamic the DMR band negotiation exists to produce.
+
+Locks:
+
+1. The trace byte-matches the committed golden file, twice over (two
+   fresh runs are byte-identical).
+2. A sanitized run (``REPRO_SANITIZE=1`` machinery) is byte-identical
+   to the plain run and reports zero violations.
+3. One serving grid point re-simulated from scratch byte-matches its
+   row in ``tests/data/golden_serving_sweep.json`` and a journal resume
+   reuses it without re-running (serial == parallel == resume for the
+   full serving grid is locked by the CI serving smoke step).
+
+Regenerate the golden file (after an *intentional* semantic change)
+with:
+
+    PYTHONPATH=src:tests python -c \\
+        "import test_serving_rms as t; t.write_golden()"
+"""
+import json
+import os
+
+from repro.rms.costmodel import AppModel
+from repro.rms.job import Job, JobState
+from repro.rms.simulator import ClusterSimulator, SimConfig
+from repro.workload.traffic import DiurnalCurve, TrafficSpec
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+GOLDEN = os.path.join(DATA, "golden_serving_trace.json")
+
+
+def serving_scenario() -> ClusterSimulator:
+    """One serving job under a diurnal burst + a batch job at the peak.
+
+    The serving app drains ~1 req/s per node; the curve crests near
+    t=60 s and a burst on [90, 150) pushes demand past what 4 nodes
+    clear, so SLO pressure expands 4 → 8.  The 6-node batch job lands
+    mid-burst when only 2 nodes are free and must wait until the ebb
+    lets the serving job shrink back down.
+    """
+    apps = {
+        "api": AppModel("api", iterations=1, t1_iter_s=1.0,
+                        serial_frac=0.0, data_bytes=1 << 20, min_nodes=2,
+                        max_nodes=8, preferred=4, check_period_s=5.0),
+        "batch": AppModel("batch", iterations=1, t1_iter_s=2.0,
+                          serial_frac=0.0, data_bytes=1 << 20, min_nodes=6,
+                          max_nodes=6, preferred=None, check_period_s=0.0),
+    }
+    curve = DiurnalCurve(base_rps=2.5, amplitude=0.2, period_s=600.0,
+                         phase_s=60.0, bursts=((90.0, 60.0, 6.0),))
+    spec = TrafficSpec(curve=curve, seed=42, t0=0.0, duration_s=600.0,
+                       slo_p99_s=2.0, bucket_s=30.0, noise=0.1)
+    serving = Job(job_id=0, app="api", submit_time=0.0, work=0.0,
+                  min_nodes=2, max_nodes=8, preferred=4, factor=2,
+                  malleable=True, check_period_s=5.0, requested_nodes=4,
+                  data_bytes=1 << 20, traffic=spec)
+    batch = Job(job_id=1, app="batch", submit_time=120.0, work=450.0,
+                min_nodes=6, max_nodes=6, preferred=None, malleable=False,
+                requested_nodes=6, data_bytes=1 << 20)
+    cfg = SimConfig(num_nodes=10, flexible=True, checkpoint_period_s=0.0)
+    return ClusterSimulator([serving, batch], cfg, apps=apps)
+
+
+def serialize(report) -> dict:
+    return {
+        "makespan": round(report.makespan, 6),
+        "actions": [
+            {"t": round(a.t, 6), "job_id": a.job_id, "action": a.action,
+             "from_nodes": a.from_nodes, "to_nodes": a.to_nodes,
+             "reason": a.reason}
+            for a in report.actions if a.action != "no_action"],
+        "serving_stats": {
+            str(jid): {"slo_violations": viol,
+                       "served": round(served, 6),
+                       "p99": round(p99, 6)}
+            for jid, (viol, served, p99)
+            in sorted(report.serving_stats.items())},
+        "job_ends": [round(j.end_time, 6) for j in report.jobs],
+    }
+
+
+def run_bytes():
+    rep = serving_scenario().run()
+    doc = serialize(rep)
+    return json.dumps(doc, indent=1, sort_keys=True).encode(), doc
+
+
+def write_golden():
+    data, _ = run_bytes()
+    with open(GOLDEN, "wb") as fh:
+        fh.write(data + b"\n")
+
+
+def test_serving_trace_matches_committed_golden():
+    data, doc = run_bytes()
+    with open(GOLDEN) as fh:
+        golden = json.load(fh)
+    assert doc["makespan"] == golden["makespan"]
+    assert doc["serving_stats"] == golden["serving_stats"]
+    assert len(doc["actions"]) == len(golden["actions"])
+    for got, want in zip(doc["actions"], golden["actions"]):
+        assert got == want
+    assert doc["job_ends"] == golden["job_ends"]
+
+
+def test_serving_trace_two_runs_byte_identical():
+    assert run_bytes()[0] == run_bytes()[0]
+
+
+def test_serving_trace_sanitized_byte_identical(monkeypatch):
+    plain, _ = run_bytes()
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    sim = serving_scenario()
+    assert sim.sanitizer is not None
+    rep = sim.run()
+    checked = json.dumps(serialize(rep), indent=1, sort_keys=True).encode()
+    assert sim.sanitizer.checks == sim.engine.dispatched
+    assert checked == plain
+
+
+def test_serving_trace_exercises_the_slo_negotiation():
+    """The golden scenario must stay event-rich: a burst-forced
+    slo-expand, an ebb shrink, and the batch job backfilling into the
+    released nodes — plus exact request conservation at the end."""
+    sim = serving_scenario()
+    rep = sim.run()
+    serving, batch = rep.jobs
+    expands = [a for a in rep.actions
+               if a.action == "expand" and a.reason == "slo-expand"]
+    shrinks = [a for a in rep.actions
+               if a.action == "shrink" and a.reason == "slo-shrink"]
+    assert expands and shrinks
+    assert max(a.to_nodes for a in expands) == 8       # rode out the burst
+    assert min(a.to_nodes for a in shrinks) <= 4       # gave nodes back
+    # the batch job could not start at submit (peak held 8 of 10 nodes);
+    # it backfilled only after an ebb shrink released capacity
+    assert batch.start_time > batch.submit_time
+    assert any(a.t <= batch.start_time and a.action == "shrink"
+               for a in rep.actions)
+    assert all(j.state is JobState.COMPLETED for j in rep.jobs)
+    # conservation: every generated request was served, exactly
+    assert serving.work_done == serving.work == rep.served_requests()
+    assert rep.slo_violations() > 0                    # the burst hurt
+    assert rep.p99_latency() > 0.0
+    # serving completion cannot precede its traffic window
+    assert serving.end_time >= 600.0
+
+
+def test_serving_sweep_row_matches_golden_artifact(tmp_path):
+    """One serving grid point re-simulated from scratch must byte-match
+    its row in the committed golden serving artifact, and a journal
+    resume must serve it back without re-running."""
+    from repro.rms import sweep
+
+    golden = sweep.load_artifact(os.path.join(
+        DATA, "golden_serving_sweep.json"))
+    points, _ = sweep.smoke_grid(os.path.join(DATA, "sample.swf"),
+                                 serving=True)
+    point = next(p for p in points
+                 if p.policy == "easy" and
+                 p.mix == (0.0, 0.0, 0.4, 0.0, 0.6))
+    row = sweep.run_point(point)
+    assert row["serving"] == 0.6
+    assert row["served_requests"] > 0.0
+    assert row["slo_violations"] > 0
+    want = [r for r in golden["results"]
+            if sweep.row_key(r) == sweep.row_key(row)]
+    assert len(want) == 1
+    assert row == want[0]
+    journal = str(tmp_path / "serving.jsonl")
+    sweep.run_sweep([point], journal=journal)
+    again = sweep.run_sweep([point], resume_from=(journal,))
+    assert again == [row]

@@ -38,8 +38,11 @@ def write_golden():
 
 
 def golden_bytes() -> str:
-    with open(GOLDEN) as fh:
-        return fh.read()
+    """Canonical bytes of the golden artifact *after* schema upgrade —
+    the committed file deliberately stays at v4 on disk so every golden
+    comparison (here and in the CI ``--check`` step) also exercises the
+    v4 → v5 auto-upgrade path against a fresh v5 run."""
+    return sweep.dumps_artifact(sweep.load_artifact(GOLDEN))
 
 
 def test_serial_sweep_matches_golden_artifact():
@@ -83,7 +86,11 @@ def test_csv_lines_follow_column_order():
 
 def test_load_artifact_round_trip_and_rejections(tmp_path):
     doc = sweep.load_artifact(GOLDEN)           # accepts the golden file
-    assert sweep.dumps_artifact(doc) == golden_bytes()
+    # upgraded doc re-serializes and re-loads as a fixed point
+    out = tmp_path / "upgraded.json"
+    out.write_text(sweep.dumps_artifact(doc))
+    assert sweep.dumps_artifact(sweep.load_artifact(str(out))) == \
+        sweep.dumps_artifact(doc)
     bad_schema = tmp_path / "bad_schema.json"
     bad_schema.write_text(json.dumps({"schema": "nope", "version": 1}))
     with pytest.raises(ValueError, match="not a sweep artifact"):
@@ -108,8 +115,9 @@ def test_winners_by_mix_deterministic_tiebreak():
          "policy": "b", "makespan_s": 40.0},
     ]
     winners = sweep.winners_by_mix(rows)
-    assert winners[("t.swf", 0.0, 0.0, 1.0, 0.0)] == "a"  # tie -> lexical
-    assert winners[("t.swf", 1.0, 0.0, 0.0, 0.0)] == "b"
+    # tie -> lexical
+    assert winners[("t.swf", 0.0, 0.0, 1.0, 0.0, 0.0)] == "a"
+    assert winners[("t.swf", 1.0, 0.0, 0.0, 0.0, 0.0)] == "b"
 
 
 def test_winners_by_mix_keyed_per_trace():
@@ -124,10 +132,10 @@ def test_winners_by_mix_keyed_per_trace():
         dict(mix, trace="big.swf", policy="sjf", makespan_s=800.0),
     ]
     winners = sweep.winners_by_mix(rows)
-    assert winners[("small.swf", 0.0, 0.0, 1.0, 0.0)] == "easy"
+    assert winners[("small.swf", 0.0, 0.0, 1.0, 0.0, 0.0)] == "easy"
     # pre-fix this bucket did not exist: big.swf's rows lost to small.swf's
     # globally smaller makespans and the table crowned "easy" for all
-    assert winners[("big.swf", 0.0, 0.0, 1.0, 0.0)] == "sjf"
+    assert winners[("big.swf", 0.0, 0.0, 1.0, 0.0, 0.0)] == "sjf"
     assert len(winners) == 2
 
 
@@ -156,7 +164,7 @@ def test_smoke_grid_includes_evolving_mix():
     """The golden grid must keep exercising the evolving workload class."""
     points, grid = sweep.smoke_grid(TRACE)
     assert any(m[3] > 0 for m in grid["mixes"])
-    assert all(len(p.mix) == 4 for p in points)
+    assert all(len(p.mix) == 5 for p in points)
     doc = json.loads(golden_bytes())
     assert any(row["evolving"] > 0 and row["phase_changes"] > 0
                for row in doc["results"])
@@ -164,7 +172,7 @@ def test_smoke_grid_includes_evolving_mix():
 
 def test_load_artifact_upgrades_v1(tmp_path):
     """Pre-evolving (v1) artifacts stay loadable: rows gain evolving=0.0
-    and phase_changes=0, grid mixes widen to 4 fractions."""
+    and phase_changes=0, grid mixes widen to 5 fractions."""
     v1 = {"schema": sweep.SCHEMA_ID, "version": 1,
           "grid": {"mixes": [[0.0, 0.0, 1.0]]},
           "results": [{"trace": "t.swf", "policy": "easy", "rigid": 0.0,
@@ -178,10 +186,12 @@ def test_load_artifact_upgrades_v1(tmp_path):
     row = doc["results"][0]
     assert row["evolving"] == 0.0
     assert row["phase_changes"] == 0
-    # the v1 → v2 → v3 → v4 chain lands at the current schema
+    # the v1 → v2 → v3 → v4 → v5 chain lands at the current schema
     assert row["calibration_id"] == sweep.PAPER_FIT_ID
     assert row["churn"] == ""
-    assert doc["grid"]["mixes"] == [[0.0, 0.0, 1.0, 0.0]]
+    assert row["serving"] == 0.0
+    assert row["slo_violations"] == 0
+    assert doc["grid"]["mixes"] == [[0.0, 0.0, 1.0, 0.0, 0.0]]
     # upgraded rows sort with the current key
     assert sweep.row_key(row)
 
@@ -231,7 +241,7 @@ def test_load_artifact_upgrades_v3(tmp_path):
     assert row["drains"] == row["joins"] == 0
     assert row["power_offs"] == row["power_ons"] == 0
     assert row["phase_changes"] == 3         # v3 fields untouched
-    # upgraded artifact re-loads as native v4 (round-trip stability)
+    # upgraded artifact re-loads as the native version (round-trip)
     out = tmp_path / "v4.json"
     out.write_text(sweep.dumps_artifact(doc))
     again = sweep.load_artifact(str(out))

@@ -1,0 +1,204 @@
+"""Property tests: the serving traffic model is open-loop and seeded.
+
+The load-bearing property of :mod:`repro.workload.traffic` is that the
+arrival process is a pure function of ``(seed, rate curve)`` — nothing
+the simulator does (allocation decisions, query times, query *order*)
+can change how many requests arrive.  A closed-loop generator would let
+a policy "reduce load" by shrinking a job, corrupting every
+policy-comparison row the sweep produces.
+
+Runs under real hypothesis when installed, the deterministic
+boundary-example stub otherwise (the container has no hypothesis).
+"""
+import math
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_stub import given, settings, strategies as st
+
+import pytest
+
+from repro.workload.traffic import DiurnalCurve, TrafficGenerator, TrafficSpec
+
+
+def make_spec(seed=7, base_rps=4.0, amplitude=0.5, noise=0.1,
+              duration=900.0, bursts=()):
+    curve = DiurnalCurve(base_rps=base_rps, amplitude=amplitude,
+                         period_s=duration / 2.0, phase_s=duration / 8.0,
+                         bursts=tuple(bursts))
+    return TrafficSpec(curve=curve, seed=seed, t0=100.0,
+                       duration_s=duration, bucket_s=30.0, noise=noise)
+
+
+def probe_times(spec, n=40):
+    """Deterministic probe grid covering before/inside/after the window."""
+    lo, hi = spec.t0 - 50.0, spec.end + 50.0
+    return [lo + (hi - lo) * i / (n - 1) for i in range(n)]
+
+
+# -- determinism ------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       base=st.floats(min_value=0.0, max_value=50.0),
+       amplitude=st.floats(min_value=0.0, max_value=1.0),
+       noise=st.floats(min_value=0.0, max_value=0.9))
+def test_same_seed_generators_identical(seed, base, amplitude, noise):
+    """Two generators built from equal specs agree bit-for-bit at every
+    probe — arrivals are a function of the spec alone."""
+    spec = make_spec(seed=seed, base_rps=base, amplitude=amplitude,
+                     noise=noise)
+    a, b = TrafficGenerator(spec), TrafficGenerator(spec)
+    for t in probe_times(spec):
+        assert a.arrivals_until(t) == b.arrivals_until(t)
+        assert a.rate(t) == b.rate(t)
+    assert a.total() == b.total()
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       noise=st.floats(min_value=0.0, max_value=0.9))
+def test_query_order_cannot_change_arrivals(seed, noise):
+    """The open-loop property, mechanically: the simulator queries the
+    generator at whatever times its allocation decisions produce, so a
+    reversed / interleaved query schedule must return bit-identical
+    values to a forward scan (the lazy bucket extension must not leak
+    query history into results)."""
+    spec = make_spec(seed=seed, noise=noise)
+    forward, backward = TrafficGenerator(spec), TrafficGenerator(spec)
+    times = probe_times(spec)
+    want = [forward.arrivals_until(t) for t in times]
+    got = {t: backward.arrivals_until(t) for t in reversed(times)}
+    assert [got[t] for t in times] == want
+    # interleaved re-queries (an engine revisiting earlier timestamps
+    # after a requeue) don't perturb anything either
+    mixed = TrafficGenerator(spec)
+    order = times[::3] + times[1::3] + list(reversed(times)) + times
+    for t in order:
+        assert mixed.arrivals_until(t) == want[times.index(t)]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=1_000))
+def test_different_seeds_differ(seed):
+    """Noise is seeded per (seed, bucket): distinct seeds give distinct
+    arrival counts (almost surely — boundary-true for these params)."""
+    a = TrafficGenerator(make_spec(seed=seed, noise=0.5))
+    b = TrafficGenerator(make_spec(seed=seed + 1, noise=0.5))
+    assert a.total() != b.total()
+
+
+# -- conservation / shape ---------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       amplitude=st.floats(min_value=0.0, max_value=1.0),
+       noise=st.floats(min_value=0.0, max_value=0.9))
+def test_cumulative_monotone_and_clamped(seed, amplitude, noise):
+    spec = make_spec(seed=seed, amplitude=amplitude, noise=noise)
+    gen = TrafficGenerator(spec)
+    times = probe_times(spec)
+    vals = [gen.arrivals_until(t) for t in times]
+    assert all(b >= a for a, b in zip(vals, vals[1:]))
+    assert gen.arrivals_until(spec.t0 - 1.0) == 0.0
+    assert gen.arrivals_until(spec.end + 1.0) == gen.total()
+    assert all(gen.rate(t) >= 0.0 for t in times)
+    assert gen.rate(spec.t0 - 1.0) == 0.0 == gen.rate(spec.end + 1.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       noise=st.floats(min_value=0.0, max_value=0.9),
+       cut=st.floats(min_value=0.1, max_value=0.9))
+def test_partition_sums_to_total(seed, noise, cut):
+    """arrivals_between telescopes: splitting the window at any point
+    conserves the request count (no request created or lost at a cut —
+    the property the sanitizer's serving_conservation invariant leans
+    on)."""
+    spec = make_spec(seed=seed, noise=noise)
+    gen = TrafficGenerator(spec)
+    mid = spec.t0 + cut * spec.duration_s
+    left = gen.arrivals_between(spec.t0, mid)
+    right = gen.arrivals_between(mid, spec.end)
+    assert left >= 0.0 and right >= 0.0
+    assert (left + right) == pytest.approx(gen.total(), rel=1e-12, abs=1e-9)
+
+
+def test_zero_noise_matches_closed_form_integral():
+    """With noise off the fluid arrivals are exactly the curve integral."""
+    spec = make_spec(noise=0.0, amplitude=0.4)
+    gen = TrafficGenerator(spec)
+    for t in probe_times(spec):
+        lo = min(max(t, spec.t0), spec.end)
+        want = spec.curve.integral(spec.t0, lo)
+        assert gen.arrivals_until(t) == pytest.approx(want, rel=1e-12,
+                                                      abs=1e-9)
+
+
+def test_bursts_add_load_inside_their_window_only():
+    quiet = TrafficGenerator(make_spec(noise=0.0))
+    spec = make_spec(noise=0.0, bursts=[(400.0, 100.0, 6.0)])
+    bursty = TrafficGenerator(spec)
+    assert bursty.arrivals_until(400.0) == quiet.arrivals_until(400.0)
+    assert bursty.arrivals_between(400.0, 500.0) == pytest.approx(
+        quiet.arrivals_between(400.0, 500.0) + 600.0, rel=1e-12)
+    assert bursty.rate(450.0) == pytest.approx(quiet.rate(450.0) + 6.0)
+    assert bursty.rate(550.0) == pytest.approx(quiet.rate(550.0))
+
+
+def test_curve_rate_is_periodic_and_nonnegative():
+    curve = DiurnalCurve(base_rps=2.0, amplitude=1.0, period_s=120.0,
+                         phase_s=13.0)
+    for t in range(0, 600, 7):
+        assert curve.rate(float(t)) >= 0.0
+        assert curve.rate(float(t)) == pytest.approx(
+            curve.rate(float(t) + 120.0), rel=1e-12, abs=1e-12)
+    assert curve.rate(13.0) == pytest.approx(4.0)     # crest: base*(1+amp)
+
+
+def test_spec_validation():
+    curve = DiurnalCurve(base_rps=1.0)
+    with pytest.raises(ValueError):
+        DiurnalCurve(base_rps=-1.0)
+    with pytest.raises(ValueError):
+        DiurnalCurve(base_rps=1.0, amplitude=1.5)
+    with pytest.raises(ValueError):
+        DiurnalCurve(base_rps=1.0, period_s=0.0)
+    with pytest.raises(ValueError):
+        TrafficSpec(curve=curve, seed=1, duration_s=0.0)
+    with pytest.raises(ValueError):
+        TrafficSpec(curve=curve, seed=1, noise=1.0)
+    with pytest.raises(ValueError):
+        TrafficSpec(curve=curve, seed=1, bucket_s=0.0)
+
+
+# -- open loop at the simulator level ---------------------------------------
+
+def test_allocation_decisions_cannot_change_served_totals():
+    """End-to-end open-loop check: the same serving workload replayed
+    under schedulers with opposite incentives (moldable squeezes start
+    sizes for makespan, fcfs never backfills) must serve *exactly* the
+    same number of requests — policies redistribute when requests are
+    served, never how many arrive."""
+    import os
+
+    from repro.rms.simulator import ClusterSimulator, SimConfig
+    from repro.rms.scheduler import SchedulerConfig
+    from repro.workload.swf import MalleabilityMix, jobs_from_swf, parse_swf
+
+    trace = parse_swf(os.path.join(os.path.dirname(__file__), "data",
+                                   "sample.swf"))
+    mix = MalleabilityMix(rigid=0.0, moldable=0.0, malleable=0.5,
+                          evolving=0.0, serving=0.5)
+    totals = {}
+    for policy in ("moldable", "fcfs"):
+        jobs, apps = jobs_from_swf(trace, num_nodes=64, mix=mix, seed=11,
+                                   max_jobs=12)
+        cfg = SimConfig(num_nodes=64, seed=11,
+                        sched=SchedulerConfig(policy=policy))
+        rep = ClusterSimulator(jobs, cfg, apps=apps).run()
+        totals[policy] = rep.served_requests()
+        assert rep.served_requests() > 0.0
+        assert math.isfinite(rep.p99_latency())
+    assert totals["moldable"] == totals["fcfs"]
