@@ -26,12 +26,14 @@ Trajectory artifact schema (``BENCH_engine.json``)::
                   "timings": {"<scenario>": {"wall_s": ...,
                       "events_per_sec": ...},
                       "total_wall_s": ..., "events_per_sec": ...,
-                      "sanitize_overhead_x": ...}}]}
+                      "sanitize_overhead_x": ..., "obs_overhead_x": ...}}]}
 
 The ``sanitize_sjf_mixed_sync`` scenario replays ``sjf_mixed_sync`` in
 checked mode (``SimConfig(sanitize=True)``); its deterministic fields
 must equal the twin's and the bench fails if the wall-time overhead
-reaches 3x.
+reaches 3x.  ``trace_sjf_mixed_sync`` replays the same twin under the
+observability recorder (:class:`repro.obs.recorder.TraceRecorder`) with
+the same identical-semantics requirement and a 2x overhead budget.
 
 ``entries`` is append-only history (oldest first); CI checks the *last*
 entry's deterministic fields against a fresh run.
@@ -63,27 +65,34 @@ SCHEMA_VERSION = 1
 WORKLOAD = {"n_jobs": 1000, "num_nodes": 64, "seed": 7, "time_scale": 0.05}
 
 #: (label, policy, (rigid, moldable, malleable, evolving), scheduling,
-#: sanitize).  Chosen to cover the hot paths: sync + async DMR checks,
-#: backfill, evolving phase churn, and the preemption channel.  The
-#: ``sanitize_*`` scenario replays an existing scenario in checked mode
-#: (:mod:`repro.rms.sanitizer`): its deterministic fields must be
-#: identical to the unsanitized twin's, and its wall-time ratio to the
-#: twin is recorded as ``timings["sanitize_overhead_x"]`` and pinned
-#: below :data:`SANITIZE_OVERHEAD_MAX`.
+#: variant).  Chosen to cover the hot paths: sync + async DMR checks,
+#: backfill, evolving phase churn, and the preemption channel.  Variants
+#: replay an existing scenario under an engine monitor: ``"sanitize"``
+#: installs the invariant sanitizer (:mod:`repro.rms.sanitizer`),
+#: ``"trace"`` the observability recorder
+#: (:class:`repro.obs.recorder.TraceRecorder`, finalize included in the
+#: timed region).  A variant's deterministic fields must be identical to
+#: its plain twin's, and its wall-time ratio to the twin is recorded as
+#: ``timings["sanitize_overhead_x"]`` / ``timings["obs_overhead_x"]``
+#: and pinned below :data:`SANITIZE_OVERHEAD_MAX` /
+#: :data:`OBS_OVERHEAD_MAX`.
 SCENARIOS: Tuple[Tuple[str, str, Tuple[float, float, float, float], str,
-                       bool], ...] = (
-    ("easy_all_malleable_sync", "easy", (0.0, 0.0, 1.0, 0.0), "sync",
-     False),
-    ("sjf_mixed_sync", "sjf", (0.25, 0.15, 0.3, 0.3), "sync", False),
-    ("malleable_async", "malleable", (0.0, 0.0, 1.0, 0.0), "async", False),
-    ("preempt_mixed_sync", "preempt", (0.2, 0.2, 0.6, 0.0), "sync", False),
+                       str], ...] = (
+    ("easy_all_malleable_sync", "easy", (0.0, 0.0, 1.0, 0.0), "sync", ""),
+    ("sjf_mixed_sync", "sjf", (0.25, 0.15, 0.3, 0.3), "sync", ""),
+    ("malleable_async", "malleable", (0.0, 0.0, 1.0, 0.0), "async", ""),
+    ("preempt_mixed_sync", "preempt", (0.2, 0.2, 0.6, 0.0), "sync", ""),
     ("sanitize_sjf_mixed_sync", "sjf", (0.25, 0.15, 0.3, 0.3), "sync",
-     True),
+     "sanitize"),
+    ("trace_sjf_mixed_sync", "sjf", (0.25, 0.15, 0.3, 0.3), "sync",
+     "trace"),
 )
 
-#: The sanitized twin used for the overhead ratio.
+#: The monitored twins used for the overhead ratios.
 SANITIZE_TWIN = ("sanitize_sjf_mixed_sync", "sjf_mixed_sync")
 SANITIZE_OVERHEAD_MAX = 3.0
+OBS_TWIN = ("trace_sjf_mixed_sync", "sjf_mixed_sync")
+OBS_OVERHEAD_MAX = 2.0
 
 ROUND_DIGITS = 6
 
@@ -114,7 +123,7 @@ def _build_sim(trace, policy: str, mix, scheduling: str,
 
 
 def run_scenario(trace, policy: str, mix, scheduling: str, repeats: int,
-                 sanitize: bool = False
+                 variant: str = ""
                  ) -> Tuple[Dict[str, object], Dict[str, float]]:
     """Returns ``(deterministic, timings)`` for one scenario.
 
@@ -127,9 +136,16 @@ def run_scenario(trace, policy: str, mix, scheduling: str, repeats: int,
     best_wall = None
     det: Dict[str, object] = {}
     for _ in range(max(repeats, 1)):
-        sim = _build_sim(trace, policy, mix, scheduling, sanitize)
+        sim = _build_sim(trace, policy, mix, scheduling,
+                         sanitize=variant == "sanitize")
+        recorder = None
+        if variant == "trace":
+            from repro.obs.recorder import TraceRecorder
+            recorder = TraceRecorder(sim).install()
         t0 = time.perf_counter()
         report = sim.run()
+        if recorder is not None:
+            recorder.finalize(report)   # recording cost includes finalize
         wall = time.perf_counter() - t0
         det = {
             "dispatched": sim.engine.dispatched,
@@ -158,9 +174,9 @@ def run_bench(repeats: int = 3, verbose: bool = True
               f"best of {repeats})")
         print("scenario,dispatched,actions,completed,makespan_s,"
               "wall_s,events_per_sec")
-    for label, policy, mix, scheduling, sanitize in SCENARIOS:
+    for label, policy, mix, scheduling, variant in SCENARIOS:
         det, tim = run_scenario(trace, policy, mix, scheduling, repeats,
-                                sanitize)
+                                variant)
         deterministic[label] = det
         timings[label] = tim
         total_events += det["dispatched"]
@@ -172,18 +188,23 @@ def run_bench(repeats: int = 3, verbose: bool = True
     deterministic["total_dispatched"] = total_events
     timings["total_wall_s"] = round(total_wall, 6)
     timings["events_per_sec"] = round(total_events / total_wall, 1)
-    checked, twin = SANITIZE_TWIN
-    if deterministic[checked] != deterministic[twin]:
-        raise RuntimeError(
-            f"sanitizer perturbed simulation semantics: {checked} "
-            f"{deterministic[checked]} != {twin} {deterministic[twin]}")
-    overhead = timings[checked]["wall_s"] / timings[twin]["wall_s"]
-    timings["sanitize_overhead_x"] = round(overhead, 2)
+    for twin_key, (checked, twin) in (("sanitize_overhead_x",
+                                       SANITIZE_TWIN),
+                                      ("obs_overhead_x", OBS_TWIN)):
+        if deterministic[checked] != deterministic[twin]:
+            raise RuntimeError(
+                f"monitor perturbed simulation semantics: {checked} "
+                f"{deterministic[checked]} != {twin} "
+                f"{deterministic[twin]}")
+        overhead = timings[checked]["wall_s"] / timings[twin]["wall_s"]
+        timings[twin_key] = round(overhead, 2)
     if verbose:
         print(f"total,{total_events},,,,{timings['total_wall_s']},"
               f"{timings['events_per_sec']}")
         print(f"# sanitize overhead: {timings['sanitize_overhead_x']}x "
               f"(limit {SANITIZE_OVERHEAD_MAX}x)")
+        print(f"# obs overhead: {timings['obs_overhead_x']}x "
+              f"(limit {OBS_OVERHEAD_MAX}x)")
     return deterministic, timings
 
 
@@ -258,6 +279,10 @@ def main(argv=None) -> int:
     if timings["sanitize_overhead_x"] >= SANITIZE_OVERHEAD_MAX:
         print(f"# FAIL sanitize overhead {timings['sanitize_overhead_x']}x "
               f">= {SANITIZE_OVERHEAD_MAX}x budget")
+        return 1
+    if timings["obs_overhead_x"] >= OBS_OVERHEAD_MAX:
+        print(f"# FAIL obs overhead {timings['obs_overhead_x']}x "
+              f">= {OBS_OVERHEAD_MAX}x budget")
         return 1
     if args.append:
         append_entry(args.append, args.label, deterministic, timings)

@@ -45,13 +45,20 @@ SERVING_MIXES = "0:0:0.7:0:0.3,0.25:0:0.25:0.2:0.3,0:0:0.4:0:0.6"
 
 def run_zoo(trace: str, *, num_nodes: int = 64, workers: int = 0,
             mixes=None, seed: int = 7, metric: str = "makespan_s",
-            churn=None):
+            churn=None, trace_dir=None):
     """Returns (rows, winners): sweep rows + winning policy keyed by
-    ``(trace, rigid, moldable, malleable, evolving, serving)``."""
+    ``(trace, rigid, moldable, malleable, evolving, serving)``.
+
+    ``trace_dir`` replays every zoo point under a ``TraceRecorder`` and
+    drops its ``repro.obs`` artifacts there (rows are unchanged — the
+    observer-effect guarantee)."""
     mixes = mixes or parse_mixes(DEFAULT_MIXES)
     policies = sorted(POLICY_REGISTRY)
+    if trace_dir:
+        os.makedirs(trace_dir, exist_ok=True)
     points = build_grid([trace], policies, mixes, (True,),
-                        num_nodes=num_nodes, seed=seed, churn=churn)
+                        num_nodes=num_nodes, seed=seed, churn=churn,
+                        trace_dir=trace_dir)
     rows = run_sweep(points, workers=workers)
     return rows, winners_by_mix(rows, metric=metric)
 
@@ -74,6 +81,9 @@ def main(argv=None):
                     help="co-schedule SLO-bound serving jobs with the "
                          "batch mix (default mixes gain a serving share) "
                          "and print the makespan-vs-SLO winner table")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="write repro.obs span/metrics/Perfetto trace "
+                         "artifacts for every zoo point into DIR")
     ap.add_argument("--artifact", default=None,
                     help="write the versioned JSON artifact here")
     args = ap.parse_args(argv)
@@ -89,7 +99,7 @@ def main(argv=None):
     rows, winners = run_zoo(args.trace, num_nodes=args.nodes,
                             workers=args.workers, mixes=mixes,
                             seed=args.seed, metric=args.metric,
-                            churn=args.churn)
+                            churn=args.churn, trace_dir=args.trace_dir)
     for line in csv_lines(rows):
         print(line)
 

@@ -1,4 +1,4 @@
-"""ENT rules: wall-clock and entropy sources in simulation code.
+"""ENT rules: wall-clock, entropy, and ad-hoc output in simulation code.
 
 The simulator's outputs must be a pure function of (workload, config,
 seed).  Any wall-clock or unseeded-RNG call inside a determinism-
@@ -6,6 +6,13 @@ critical module can leak host state into a golden artifact.  The one
 sanctioned timing call is ``time.perf_counter`` — used to *measure*
 in-process policy latency, which is reported out-of-band
 (``SimReport.policy_wall_s``) and never injected into simulation time.
+
+ENT002 extends the discipline to *reporting*: library code under
+``repro.rms``/``repro.obs`` must not ``print()`` or write to
+stdout/stderr directly — results flow through returned artifacts or the
+observability layer (:mod:`repro.obs`), so traced and untraced runs
+emit identical streams.  The one sanctioned surface is a module's
+``main()`` CLI entry point.
 """
 from __future__ import annotations
 
@@ -66,3 +73,44 @@ class EntropyRule(Rule):
                         mod, node, f"legacy {'.'.join(parts)}() uses "
                         f"numpy's global RNG; use a seeded "
                         f"np.random.default_rng")
+
+
+@register
+class AdHocOutputRule(Rule):
+    rule_id = "ENT002"
+    title = ("print()/stdout/stderr write in library code; report through "
+             "repro.obs artifacts (main() entry points are exempt)")
+    domains = ("rms", "obs")
+
+    STREAMS = {"stdout", "stderr"}
+    WRITE_ATTRS = {"write", "writelines"}
+
+    def _in_main(self, mod: Module, node: ast.AST) -> bool:
+        while node is not None:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return node.name == "main"
+            node = mod.parent(node)
+        return False
+
+    def run(self, mod: Module) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            if isinstance(func, ast.Name) and func.id == "print":
+                if not self._in_main(mod, node):
+                    yield self.finding(
+                        mod, node, "print() in library code writes to the "
+                        "process stream; return data or record it via "
+                        "repro.obs")
+                continue
+            parts = dotted_parts(func)
+            if not parts or len(parts) < 2:
+                continue
+            if parts[-1] in self.WRITE_ATTRS and \
+                    parts[-2] in self.STREAMS and \
+                    not self._in_main(mod, node):
+                yield self.finding(
+                    mod, node, f"{'.'.join(parts)}() is an ad-hoc stream "
+                    f"write in library code; report through repro.obs "
+                    f"artifacts")

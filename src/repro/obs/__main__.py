@@ -1,0 +1,5 @@
+"""``python -m repro.obs`` — the decision-audit CLI entry point."""
+from repro.obs.report import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -187,6 +187,37 @@ Handler = Callable[[Event], None]
 
 
 # ---------------------------------------------------------------------------
+# Monitors
+# ---------------------------------------------------------------------------
+
+class _MonitorFanout:
+    """Dispatches monitor hooks to several monitors in registration order.
+
+    Only materialized when two or more monitors are installed, so the
+    common cases (none, or just the sanitizer / just the recorder) pay no
+    extra indirection: the hot loop sees either ``None`` or the single
+    monitor object itself.
+    """
+
+    __slots__ = ("monitors",)
+
+    def __init__(self, monitors):
+        self.monitors = tuple(monitors)
+
+    def on_schedule(self, event: Event) -> None:
+        for m in self.monitors:
+            m.on_schedule(event)
+
+    def before_event(self, event: Event) -> None:
+        for m in self.monitors:
+            m.before_event(event)
+
+    def after_event(self, event: Event) -> None:
+        for m in self.monitors:
+            m.after_event(event)
+
+
+# ---------------------------------------------------------------------------
 # Engine
 # ---------------------------------------------------------------------------
 
@@ -209,11 +240,51 @@ class SimulationEngine:
         # registration — dispatch never walks the MRO itself.
         self._chain: Dict[Type[Event], Tuple[Handler, ...]] = {}
         self.dispatched = 0
-        # Optional invariant monitor (the opt-in sanitizer): an object
-        # with ``on_schedule(event)`` / ``before_event(event)`` /
-        # ``after_event(event)``.  Install *before* run() — the hot loop
-        # hoists the reference, so a mid-run swap is not observed.
-        self.monitor = None
+        # Optional monitors (sanitizer, trace recorder, …): objects with
+        # ``on_schedule(event)`` / ``before_event(event)`` /
+        # ``after_event(event)``, observing every event in registration
+        # order.  ``_monitor`` holds the composed view the hot paths read:
+        # None when empty, the sole monitor itself when one is installed,
+        # a _MonitorFanout above that.  Install *before* run() — the hot
+        # loop hoists the reference, so a mid-run change is not observed.
+        self._monitors: Tuple = ()
+        self._monitor = None
+
+    # -- monitors ------------------------------------------------------------
+
+    @property
+    def monitor(self):
+        """The composed monitor view (None / single monitor / fan-out)."""
+        return self._monitor
+
+    @monitor.setter
+    def monitor(self, value) -> None:
+        # Backwards-compatible single-slot assignment: replaces the whole
+        # monitor set (``engine.monitor = None`` uninstalls everything).
+        self._monitors = () if value is None else (value,)
+        self._compose()
+
+    def add_monitor(self, monitor) -> None:
+        """Append ``monitor`` to the ordered fan-out (idempotent)."""
+        if monitor not in self._monitors:
+            self._monitors = self._monitors + (monitor,)
+            self._compose()
+
+    def remove_monitor(self, monitor) -> None:
+        """Remove ``monitor`` if installed; no-op otherwise."""
+        if monitor in self._monitors:
+            self._monitors = tuple(
+                m for m in self._monitors if m is not monitor)
+            self._compose()
+
+    def _compose(self) -> None:
+        n = len(self._monitors)
+        if n == 0:
+            self._monitor = None
+        elif n == 1:
+            self._monitor = self._monitors[0]
+        else:
+            self._monitor = _MonitorFanout(self._monitors)
 
     # -- registration --------------------------------------------------------
 
@@ -241,8 +312,9 @@ class SimulationEngine:
     # -- scheduling ----------------------------------------------------------
 
     def schedule(self, event: Event) -> None:
-        if self.monitor is not None:
-            self.monitor.on_schedule(event)
+        monitor = self._monitor
+        if monitor is not None:
+            monitor.on_schedule(event)
         heapq.heappush(self._heap, (event.t, next(self._seq), event))
 
     def schedule_at(self, t: float, event_type: Type[Event], **fields) -> None:
@@ -267,7 +339,7 @@ class SimulationEngine:
         self.dispatched += 1
         if self.dispatched > self.max_events:
             raise RuntimeError("simulation runaway: max_events exceeded")
-        monitor = self.monitor
+        monitor = self._monitor
         if monitor is not None:
             monitor.before_event(event)
         self._dispatch(event)
@@ -285,7 +357,7 @@ class SimulationEngine:
         chains = self._chain
         dispatched = self.dispatched
         max_events = self.max_events
-        monitor = self.monitor
+        monitor = self._monitor
         try:
             while heap:
                 t, _, event = pop(heap)

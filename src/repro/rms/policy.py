@@ -25,6 +25,7 @@ from typing import List, Optional, Sequence
 from repro.core.actions import Action, Decision
 from repro.rms.cluster import Cluster
 from repro.rms.job import Job, JobState
+from repro.rms.reasons import make_reason
 
 
 def factor_sizes(cur: int, factor: int, lo: int, hi: int) -> List[int]:
@@ -169,6 +170,7 @@ class ReconfigPolicy:
                     if qjob.requested_nodes <= free + freed:
                         return Decision(
                             Action.SHRINK, new,
-                            reason=f"wide-shrink-for-job{qjob.job_id}",
+                            reason=make_reason("wide-shrink",
+                                               f"job{qjob.job_id}"),
                             boost_job_id=qjob.job_id)
         return Decision(Action.NO_ACTION, cur, reason="wide-no-action")

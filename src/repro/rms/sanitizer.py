@@ -157,7 +157,7 @@ class SimSanitizer:
     # -- installation --------------------------------------------------------
 
     def install(self) -> "SimSanitizer":
-        self.engine.monitor = self
+        self.engine.add_monitor(self)
         self._wrap_phase_band()
         policy = self.sim.scheduler.policy
         if isinstance(policy, FairSharePolicy):

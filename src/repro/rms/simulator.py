@@ -42,6 +42,7 @@ from repro.rms.engine import (CheckpointTick, ExpandTimeout, JobFinish,
                               StragglerOnset, StragglerScan, TrafficTick)
 from repro.rms.job import Job, JobState, clamp_band
 from repro.rms.policy import PolicyConfig, ReconfigPolicy
+from repro.rms.reasons import make_reason
 from repro.rms.scheduler import MAX_PRIORITY, Scheduler, SchedulerConfig
 from repro.workload.traffic import TrafficGenerator
 
@@ -966,7 +967,8 @@ class ClusterSimulator:
                                ev.preferred)
         self.actions.append(ActionRecord(
             self.now, job.job_id, "phase_change", 0.0, 0.0,
-            job.nodes, job.nodes, reason=f"phase{ev.phase}"))
+            job.nodes, job.nodes,
+            reason=make_reason("phase-entered", ev.phase)))
         # an expand wait negotiated under the old band is void; if its RJ
         # reservation held nodes, offer them to the queue now (same as the
         # timeout path) instead of letting them idle until the next event
@@ -1028,12 +1030,13 @@ class ClusterSimulator:
             job.record_nodes(self.now)
             self.actions.append(ActionRecord(
                 self.now, job.job_id, "failure_shrink", 0.0, resize_s,
-                survivors + 1, new, reason=f"node{node}-failed"))
+                survivors + 1, new,
+                reason=make_reason("node-failed", node)))
             self._schedule_completion(job)
         else:
             # Rigid job (or too few survivors): requeue, checkpoint restart.
             self._requeue(job, "failure_requeue", survivors + 1,
-                          f"node{node}-failed")
+                          make_reason("node-failed", node))
         self._snapshot()
         self._scheduler_pass()
 
@@ -1052,7 +1055,7 @@ class ClusterSimulator:
             return                      # already a live member: no-op
         self.actions.append(ActionRecord(
             self.now, -1, "node_join", 0.0, 0.0, before, after,
-            reason=f"node{nid}"))
+            reason=make_reason("node-join", nid)))
         self._capacity_snapshot()
         self._scheduler_pass()
 
@@ -1071,7 +1074,8 @@ class ClusterSimulator:
             if self.cluster.live_capacity != before:
                 self.actions.append(ActionRecord(
                     self.now, -1, "node_drain", 0.0, 0.0, before,
-                    self.cluster.live_capacity, reason=f"node{node}-idle"))
+                    self.cluster.live_capacity,
+                    reason=make_reason("node-drain-idle", node)))
                 self._capacity_snapshot()
             return
         if owner < 0:
@@ -1091,7 +1095,8 @@ class ClusterSimulator:
             self._pause(job, migrate_s)
             self.actions.append(ActionRecord(
                 self.now, owner, "drain_migrate", 0.0, migrate_s,
-                job.nodes, job.nodes, reason=f"node{node}-drain"))
+                job.nodes, job.nodes,
+                reason=make_reason("drain-vacate", node)))
             self._schedule_completion(job)
         elif kind == "shrink":
             old = job.nodes
@@ -1105,14 +1110,15 @@ class ClusterSimulator:
             self._ckpt_work[job.job_id] = job.work_done
             self.actions.append(ActionRecord(
                 self.now, owner, "drain_shrink", 0.0, resize_s, old, new,
-                reason=f"node{node}-drain"))
+                reason=make_reason("drain-vacate", node)))
             self._schedule_completion(job)
         else:
             self._requeue(job, "drain_requeue", job.nodes,
-                          f"node{node}-drain")
+                          make_reason("drain-vacate", node))
         self.actions.append(ActionRecord(
             self.now, -1, "node_drain", 0.0, 0.0, before,
-            self.cluster.live_capacity, reason=f"node{node}"))
+            self.cluster.live_capacity,
+            reason=make_reason("node-drain", node)))
         self._capacity_snapshot()
         self._snapshot()
         self._scheduler_pass()
@@ -1131,7 +1137,8 @@ class ClusterSimulator:
         self.actions.append(ActionRecord(
             self.now, -1, "power_off", 0.0, 0.0, before,
             self.cluster.live_capacity,
-            reason=",".join(f"node{n}" for n in offs)))
+            reason=make_reason("power-off",
+                               ",".join(str(n) for n in offs))))
         self._capacity_snapshot()
 
     def _on_power_on(self, node: int):
@@ -1142,7 +1149,8 @@ class ClusterSimulator:
             return
         self.actions.append(ActionRecord(
             self.now, -1, "power_on", 0.0, 0.0, before,
-            self.cluster.live_capacity, reason=f"node{node}"))
+            self.cluster.live_capacity,
+            reason=make_reason("power-on", node)))
         self._capacity_snapshot()
         self._scheduler_pass()
 

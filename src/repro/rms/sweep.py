@@ -147,10 +147,28 @@ class SweepPoint:
     # Named capacity-churn scenario (repro.rms.capacity.CHURN_SCENARIOS):
     # scheduled drains/joins + power management; None/"" => fixed cluster.
     churn: Optional[str] = None
+    # Observability replay: when set, the point runs under a
+    # :class:`repro.obs.recorder.TraceRecorder` and writes its span/
+    # metrics/Perfetto artifacts under this directory.  Deliberately NOT
+    # part of the journal key or fingerprint — tracing never changes the
+    # row (the observer-effect guarantee, ``tests/test_obs.py``).
+    trace_dir: Optional[str] = None
 
     @property
     def label(self) -> str:
         return os.path.basename(self.trace)
+
+    @property
+    def slug(self) -> str:
+        """Deterministic per-point file stem for ``trace_dir`` artifacts."""
+        m = norm_mix(self.mix)
+        mix = "-".join(f"{x:g}" for x in m)
+        parts = [self.label, self.policy, mix,
+                 "flex" if self.flexible else "fixed", self.scheduling,
+                 f"n{self.num_nodes}", f"s{self.seed}"]
+        if self.churn:
+            parts.append(f"churn_{self.churn}")
+        return "__".join(parts).replace("/", "_")
 
 
 def build_grid(traces: Sequence[str], policies: Sequence[str],
@@ -270,7 +288,23 @@ def run_point(point: SweepPoint) -> Dict[str, object]:
         cost = ReconfigCostModel.from_artifact(point.calibration)
         cfg = dataclasses.replace(cfg, cost=cost)
         calibration_id = cost.calibration_id or PAPER_FIT_ID
-    report = ClusterSimulator(jobs, cfg, apps=apps).run()
+    sim = ClusterSimulator(jobs, cfg, apps=apps)
+    recorder = None
+    if point.trace_dir:
+        from repro.obs.recorder import TraceRecorder
+        recorder = TraceRecorder(sim, meta={
+            "trace": point.label, "policy": point.policy,
+            "mix": list(norm_mix(point.mix)),
+            "flexible": bool(point.flexible),
+            "scheduling": point.scheduling,
+            "num_nodes": point.num_nodes, "seed": point.seed,
+            "churn": point.churn or "",
+            "calibration_id": calibration_id}).install()
+    report = sim.run()
+    if recorder is not None:
+        from repro.obs.export import write_trace
+        recorder.finalize(report)
+        write_trace(os.path.join(point.trace_dir, point.slug), recorder)
     return report_row(report, trace=point.label, policy=point.policy,
                       mix=point.mix, flexible=point.flexible,
                       scheduling=point.scheduling, seed=point.seed,
@@ -629,6 +663,11 @@ def main(argv=None) -> int:
                     help="named capacity-churn scenario "
                          "(repro.rms.capacity.CHURN_SCENARIOS): scheduled "
                          "drains/joins + CLUES-style power management")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="replay every grid point under a TraceRecorder "
+                         "and write repro.obs span/metrics/Perfetto "
+                         "artifacts into DIR (rows are unchanged: tracing "
+                         "is observer-effect-free)")
     ap.add_argument("--workers", type=int, default=0)
     ap.add_argument("--journal", action="append", default=None,
                     metavar="PATH",
@@ -709,6 +748,10 @@ def main(argv=None) -> int:
         points = points[shard[0]::shard[1]]
         grid = dict(grid)
         grid["shard"] = shard
+    if args.trace_dir:
+        os.makedirs(args.trace_dir, exist_ok=True)
+        points = [dataclasses.replace(p, trace_dir=args.trace_dir)
+                  for p in points]
     journal_path = args.journal[0] if args.journal else None
     resume_from = tuple(args.journal) if args.resume else ()
     rows = run_sweep(points, workers=args.workers, journal=journal_path,

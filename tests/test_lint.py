@@ -104,6 +104,42 @@ def test_ent001_rng_discipline():
 
 
 # ---------------------------------------------------------------------------
+# ENT002 — ad-hoc output in library code
+# ---------------------------------------------------------------------------
+
+def test_ent002_positive_negative_pragma():
+    pos = "def helper():\n    print('x')\n"
+    assert rules_of(lint_rms(pos, select=["ENT002"])) == ["ENT002"]
+    neg = "def main(argv=None):\n    print('x')\n"
+    assert lint_rms(neg, select=["ENT002"]) == []
+    sup = "def helper():\n    print('x')  # lint: disable=ENT002\n"
+    assert lint_rms(sup, select=["ENT002"]) == []
+
+
+def test_ent002_stream_writes():
+    src = "import sys\ndef f():\n    sys.stderr.write('x')\n"
+    assert rules_of(lint_rms(src, select=["ENT002"])) == ["ENT002"]
+    src = "import sys\ndef f():\n    sys.stdout.writelines(['x'])\n"
+    assert rules_of(lint_rms(src, select=["ENT002"])) == ["ENT002"]
+    # writes to non-stream files are fine
+    src = "def f(fh):\n    fh.write('x')\n"
+    assert lint_rms(src, select=["ENT002"]) == []
+    # main() is the sanctioned CLI surface, stream writes included
+    src = "import sys\ndef main():\n    sys.stderr.write('x')\n"
+    assert lint_rms(src, select=["ENT002"]) == []
+
+
+def test_ent002_fires_in_obs_but_not_other_packages():
+    src = "def helper():\n    print('x')\n"
+    assert rules_of(lint_source(src, path="src/repro/obs/fixture.py",
+                                select=["ENT002"])) == ["ENT002"]
+    assert lint_source(src, path="src/repro/calib/fixture.py",
+                       select=["ENT002"]) == []
+    assert lint_source(src, path="benchmarks/fixture.py",
+                       select=["ENT002"]) == []
+
+
+# ---------------------------------------------------------------------------
 # CAP001 — stale capacity reads
 # ---------------------------------------------------------------------------
 
@@ -229,8 +265,8 @@ def test_syntax_error_yields_e000():
 
 
 def test_registry_has_required_rules():
-    assert {"DET001", "DET002", "ENT001", "CAP001", "ENG001", "ENG002",
-            "MUT001", "MUT002"} <= set(REGISTRY)
+    assert {"DET001", "DET002", "ENT001", "ENT002", "CAP001", "ENG001",
+            "ENG002", "MUT001", "MUT002"} <= set(REGISTRY)
 
 
 def test_json_report_schema_stable():

@@ -1,0 +1,369 @@
+"""Observability layer (:mod:`repro.obs`): recorder, export, audit CLI.
+
+Three contracts:
+
+1. **Observer effect is zero.**  A run traced by ``TraceRecorder`` (even
+   stacked with the sanitizer) serializes byte-identically to a plain
+   run, on both golden scenarios (capacity churn, serving SLO); and the
+   recorder's private utilization recomputation equals the report's.
+2. **Artifacts are byte-deterministic and audited.**  Two traced runs
+   produce identical bytes; the committed golden artifact and rendered
+   report pin the schema; the ledger accounts for *every* ActionRecord.
+3. **Monitor fan-out preserves registration order** and the single-
+   monitor fast path keeps ``engine.monitor is m`` identity.
+
+Regenerate the goldens (after an *intentional* semantic change) with:
+
+    PYTHONPATH=src:tests python -c "import test_obs as t; t.write_golden()"
+"""
+import json
+import os
+
+import pytest
+
+import test_capacity
+import test_serving_rms
+from repro.obs import TraceRecorder, build_artifact, dumps_artifact
+from repro.obs.export import chrome_trace, spans_jsonl, write_trace
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.report import ledger_total, main as report_main, render_report
+from repro.rms.engine import Event, JobSubmit, SimulationEngine
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+GOLDEN_TRACE = os.path.join(DATA, "golden_obs_trace.json")
+GOLDEN_REPORT = os.path.join(DATA, "golden_obs_report.txt")
+
+
+# ---------------------------------------------------------------------------
+# traced golden scenario -> artifact bytes
+# ---------------------------------------------------------------------------
+
+def traced_churn():
+    sim = test_capacity.churn_scenario()
+    rec = TraceRecorder(sim, meta={"scenario": "capacity-churn"}).install()
+    report = sim.run()
+    rec.finalize(report)
+    return sim, rec, report
+
+
+def obs_bytes():
+    _, rec, report = traced_churn()
+    doc = build_artifact(rec)
+    return dumps_artifact(doc), doc, report
+
+
+def write_golden():
+    data, doc, _ = obs_bytes()
+    with open(GOLDEN_TRACE, "wb") as fh:
+        fh.write(data)
+    with open(GOLDEN_REPORT, "w", encoding="utf-8") as fh:
+        fh.write(render_report(doc))
+
+
+# ---------------------------------------------------------------------------
+# satellite: multi-monitor fan-out
+# ---------------------------------------------------------------------------
+
+class _OrderProbe:
+    def __init__(self, tag, log):
+        self.tag, self.log = tag, log
+
+    def on_schedule(self, event):
+        self.log.append((self.tag, "schedule", type(event).__name__))
+
+    def before_event(self, event):
+        self.log.append((self.tag, "before", type(event).__name__))
+
+    def after_event(self, event):
+        self.log.append((self.tag, "after", type(event).__name__))
+
+
+def test_fanout_preserves_registration_order():
+    eng = SimulationEngine()
+    eng.on(JobSubmit, lambda ev: None)
+    log = []
+    a, b = _OrderProbe("a", log), _OrderProbe("b", log)
+    eng.add_monitor(a)
+    eng.add_monitor(b)
+    eng.schedule(JobSubmit(t=1.0, job_id=0))
+    eng.run()
+    assert log == [("a", "schedule", "JobSubmit"),
+                   ("b", "schedule", "JobSubmit"),
+                   ("a", "before", "JobSubmit"),
+                   ("b", "before", "JobSubmit"),
+                   ("a", "after", "JobSubmit"),
+                   ("b", "after", "JobSubmit")]
+
+
+def test_single_monitor_keeps_identity_and_add_is_idempotent():
+    eng = SimulationEngine()
+    probe = _OrderProbe("a", [])
+    eng.add_monitor(probe)
+    assert eng.monitor is probe          # no fan-out wrapper for one
+    eng.add_monitor(probe)               # idempotent
+    assert eng.monitor is probe
+    eng.remove_monitor(probe)
+    assert eng.monitor is None
+    eng.remove_monitor(probe)            # no-op
+
+
+def test_monitor_setter_replaces_the_whole_set():
+    eng = SimulationEngine()
+    log = []
+    eng.add_monitor(_OrderProbe("a", log))
+    eng.add_monitor(_OrderProbe("b", log))
+    assert eng.monitor is not None and eng.monitor.monitors
+    solo = _OrderProbe("c", log)
+    eng.monitor = solo                   # back-compat single-slot surface
+    assert eng.monitor is solo
+    eng.monitor = None
+    assert eng.monitor is None
+
+
+def test_recorder_observes_every_event_alongside_sanitizer(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    sim = test_capacity.churn_scenario()
+    assert sim.sanitizer is not None
+    rec = TraceRecorder(sim).install()
+    events = []
+    sim.engine.add_monitor(_OrderProbe("probe", events))
+    rep = sim.run()
+    rec.finalize(rep)
+    assert sim.sanitizer.checks == sim.engine.dispatched
+    n_after = sum(1 for e in events if e[1] == "after")
+    assert n_after == sim.engine.dispatched
+    assert ledger_total(build_artifact(rec)) == len(rep.actions)
+
+
+# ---------------------------------------------------------------------------
+# satellite: observer effect is zero
+# ---------------------------------------------------------------------------
+
+def test_traced_churn_run_byte_identical_to_plain(monkeypatch):
+    plain, _ = test_capacity.run_bytes()
+    monkeypatch.setenv("REPRO_SANITIZE", "1")    # stack all three monitors
+    sim = test_capacity.churn_scenario()
+    rec = TraceRecorder(sim).install()
+    rep = sim.run()
+    rec.finalize(rep)
+    traced = json.dumps(test_capacity.serialize(rep), indent=1,
+                        sort_keys=True).encode()
+    assert traced == plain
+
+
+def test_traced_serving_run_byte_identical_to_plain(monkeypatch):
+    plain, _ = test_serving_rms.run_bytes()
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    sim = test_serving_rms.serving_scenario()
+    rec = TraceRecorder(sim).install()
+    rep = sim.run()
+    rec.finalize(rep)
+    traced = json.dumps(test_serving_rms.serialize(rep), indent=1,
+                        sort_keys=True).encode()
+    assert traced == plain
+
+
+def test_recorder_utilization_matches_report():
+    _, rec, report = traced_churn()
+    avg, std = report.utilization()
+    r_avg, r_std = rec.utilization()
+    assert abs(r_avg - avg) <= 1e-9
+    assert abs(r_std - std) <= 1e-9
+
+
+def test_ledger_accounts_for_every_action():
+    """The audit property: ledger counts sum to the exact ActionRecord
+    total — no action is dropped, none is double-counted."""
+    _, rec, report = traced_churn()
+    doc = build_artifact(rec)
+    assert ledger_total(doc) == len(report.actions)
+    # and per (action, code) the counts match a direct recount
+    from repro.rms.reasons import reason_code
+    want = {}
+    for a in report.actions:
+        key = (a.action, reason_code(a.reason))
+        want[key] = want.get(key, 0) + 1
+    got = {(r["action"], r["reason"]): r["count"] for r in doc["ledger"]}
+    assert got == want
+
+
+def test_serving_slo_samples_match_report():
+    sim = test_serving_rms.serving_scenario()
+    rec = TraceRecorder(sim).install()
+    rep = sim.run()
+    rec.finalize(rep)
+    doc = build_artifact(rec)
+    for jid, (viol, served, p99) in rep.serving_stats.items():
+        s = doc["serving"][str(jid)]
+        assert s["slo_violations"] == viol
+        # the recorder's per-probe violation counter agrees with the
+        # simulator's own total
+        counter = rec.metrics.counter("slo_violations", job=jid)
+        assert counter.value == viol
+    slo_spans = [s for s in doc["spans"] if s["kind"] == "slo"]
+    assert slo_spans, "serving scenario emitted no SLO probes"
+    assert all(s["args"]["p99_s"] is not None for s in slo_spans)
+
+
+# ---------------------------------------------------------------------------
+# artifact determinism + committed goldens
+# ---------------------------------------------------------------------------
+
+def test_artifact_two_runs_byte_identical():
+    assert obs_bytes()[0] == obs_bytes()[0]
+
+
+def test_artifact_matches_committed_golden():
+    data, doc, _ = obs_bytes()
+    with open(GOLDEN_TRACE, "rb") as fh:
+        golden_bytes = fh.read()
+    golden = json.loads(golden_bytes)
+    assert doc["schema"] == golden["schema"] == "repro.obs"
+    assert doc["version"] == golden["version"] == 1
+    assert doc["makespan"] == golden["makespan"]
+    assert doc["jobs"] == golden["jobs"]
+    assert doc["ledger"] == golden["ledger"]
+    assert len(doc["spans"]) == len(golden["spans"])
+    assert data == golden_bytes
+
+
+def test_report_matches_committed_golden():
+    _, doc, _ = obs_bytes()
+    with open(GOLDEN_REPORT, "r", encoding="utf-8") as fh:
+        golden = fh.read()
+    assert render_report(doc) == golden
+
+
+def test_job_breakdown_attribution_is_consistent():
+    _, doc, _ = obs_bytes()
+    assert doc["jobs"], "no per-job rows"
+    for j in doc["jobs"]:
+        assert j["queued_s"] >= 0 and j["run_s"] >= 0
+        assert j["reconfig_s"] >= 0 and j["compute_s"] >= 0
+        assert abs(j["compute_s"] + j["reconfig_s"] - j["run_s"]) < 1e-4
+        if j["state"] == "completed":
+            span = j["end_t"] - j["submit_t"]
+            assert abs(j["queued_s"] + j["run_s"] - span) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Perfetto / CLI surfaces
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_structure():
+    _, doc, _ = obs_bytes()
+    trace = chrome_trace(doc)
+    events = trace["traceEvents"]
+    assert trace["displayTimeUnit"] == "ms"
+    phases = {e["ph"] for e in events}
+    assert phases <= {"X", "i", "s", "f", "C", "M"}
+    # every span landed as a duration or instant event
+    n_spans = sum(1 for e in events if e["ph"] in ("X", "i"))
+    assert n_spans == len(doc["spans"])
+    # flow arrows are balanced: one start per finish
+    assert sum(1 for e in events if e["ph"] == "s") == \
+        sum(1 for e in events if e["ph"] == "f")
+    # granted resizes produce arrows (churn scenario has real resizes)
+    assert any(e["ph"] == "s" for e in events)
+    assert all(e["dur"] >= 0 for e in events if e["ph"] == "X")
+    assert any(e["ph"] == "C" for e in events)     # counter tracks
+    names = {e["args"]["name"] for e in events
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert names == {"jobs", "dmr", "cluster", "metrics"}
+
+
+def test_write_trace_bundle_and_cli(tmp_path, capsys):
+    sim, rec, report = traced_churn()
+    paths = write_trace(str(tmp_path / "churn"), rec)
+    for p in paths.values():
+        assert os.path.exists(p)
+    with open(paths["spans"], "rb") as fh:
+        lines = fh.read().splitlines()
+    doc = json.load(open(paths["obs"]))
+    assert len(lines) == len(doc["spans"])
+    json.loads(lines[0])                           # valid JSONL
+    json.load(open(paths["perfetto"]))             # valid JSON
+
+    assert report_main([paths["obs"]]) == 0
+    out = capsys.readouterr().out
+    assert "per-job time breakdown" in out
+    assert "DMR action ledger" in out
+    assert report_main([paths["obs"], "--section", "ledger"]) == 0
+
+
+def test_cli_check_mode_detects_drift(tmp_path, capsys):
+    assert report_main([GOLDEN_TRACE, "--check", GOLDEN_REPORT]) == 0
+    capsys.readouterr()
+    bad = tmp_path / "bad.txt"
+    bad.write_text("not the report\n")
+    assert report_main([GOLDEN_TRACE, "--check", str(bad)]) == 1
+    assert "DRIFT" in capsys.readouterr().out
+
+
+def test_load_artifact_rejects_foreign_schema(tmp_path):
+    from repro.obs.report import load_artifact
+    p = tmp_path / "x.json"
+    p.write_text(json.dumps({"schema": "other", "version": 1}))
+    with pytest.raises(ValueError):
+        load_artifact(str(p))
+    p.write_text(json.dumps({"schema": "repro.obs", "version": 99}))
+    with pytest.raises(ValueError):
+        load_artifact(str(p))
+
+
+# ---------------------------------------------------------------------------
+# metrics primitives
+# ---------------------------------------------------------------------------
+
+def test_counter_and_gauge_semantics():
+    c = Counter()
+    c.inc()
+    c.inc(3)
+    assert c.value == 4
+    g = Gauge()
+    g.set(0.0, 5)
+    g.set(1.0, 5)                  # unchanged value: deduped
+    g.set(2.0, 7)
+    g.set(2.0, 9)                  # same-t rewrite replaces the sample
+    assert g.samples == [(0.0, 5), (2.0, 9)]
+    assert g.last == 9
+    g.set(3.0, 5)
+    assert g.integral(4.0) == pytest.approx(5 * 2.0 + 9 * 1.0 + 5 * 1.0)
+
+
+def test_histogram_buckets_and_overflow():
+    h = Histogram(bounds=(1.0, 10.0))
+    for v in (0.5, 1.0, 5.0, 100.0):
+        h.observe(v)
+    assert h.counts == [2, 1, 1]   # <=1, <=10, overflow
+    assert h.count == 4
+    assert h.total == pytest.approx(106.5)
+
+
+def test_registry_labels_and_kind_clash():
+    m = MetricsRegistry()
+    assert m.counter("x", job=1) is m.counter("x", job=1)
+    assert m.counter("x", job=1) is not m.counter("x", job=2)
+    with pytest.raises(TypeError):
+        m.gauge("x", job=1)        # same name+labels, different kind
+    doc = m.to_doc()
+    assert sorted(doc) == ["counters", "gauges", "histograms"]
+
+
+def test_metrics_doc_is_deterministic():
+    def build():
+        m = MetricsRegistry()
+        m.counter("b").inc()
+        m.counter("a", k=2).inc(2)
+        m.gauge("g", job=1).set(1.0, 3)
+        m.histogram("h").observe(0.2)
+        return json.dumps(m.to_doc(), sort_keys=True)
+    assert build() == build()
+
+
+def test_recorder_requires_finalize_before_export():
+    sim = test_capacity.churn_scenario()
+    rec = TraceRecorder(sim).install()
+    sim.run()
+    with pytest.raises(RuntimeError):
+        build_artifact(rec)

@@ -1,0 +1,176 @@
+"""Closed reason vocabulary (:mod:`repro.rms.reasons`) regression.
+
+Every ``ActionRecord.reason`` the simulator emits must parse to a code in
+``REASON_CODES`` — the observability ledger groups by code, so an
+out-of-vocabulary emission (or a code with varying data baked in, like
+the historical ``phase{i}``/``node{n}``) silently fragments the audit.
+The scenario battery below walks every emission family: DMR policy
+decisions, async pathologies, preemption, EVOLVING phases, faults and
+stragglers, capacity churn and power management, and serving SLO bands.
+"""
+import pytest
+
+import test_capacity
+import test_engine_determinism
+import test_evolving
+import test_serving_rms
+from repro.rms import (MAX_PRIORITY, AppModel, CapacityConfig,
+                       ClusterSimulator, Job, SimConfig)
+from repro.rms.reasons import (REASON_CODES, is_known_reason, make_reason,
+                               reason_code, reason_detail)
+from repro.rms.scheduler import SchedulerConfig
+from repro.workload import make_workload
+
+
+# ---------------------------------------------------------------------------
+# vocabulary primitives
+# ---------------------------------------------------------------------------
+
+def test_make_reason_validates_code():
+    assert make_reason("node-failed") == "node-failed"
+    assert make_reason("node-failed", 3) == "node-failed:3"
+    with pytest.raises(ValueError):
+        make_reason("node3-failed")          # varying data baked in
+    with pytest.raises(ValueError):
+        make_reason("")
+
+
+def test_reason_code_and_detail_roundtrip():
+    assert reason_code("node-failed:3") == "node-failed"
+    assert reason_detail("node-failed:3") == "3"
+    assert reason_code("at-preferred") == "at-preferred"
+    assert reason_detail("at-preferred") == ""
+    # detail may itself contain colons (e.g. joined node lists)
+    assert reason_detail("power-off:1,2:3") == "1,2:3"
+
+
+def test_is_known_reason():
+    assert is_known_reason("slo-expand")
+    assert is_known_reason("drain-vacate:9")
+    assert not is_known_reason("")
+    assert not is_known_reason("node3-failed")
+
+
+def test_codes_never_embed_varying_data():
+    """Codes are enum-like: lowercase words and dashes only — any digit
+    in a code is smuggled detail (the pre-vocabulary bug)."""
+    for code in REASON_CODES:
+        assert code, "empty code"
+        assert not any(ch.isdigit() for ch in code), code
+        assert code == code.lower(), code
+        assert ":" not in code, code
+
+
+# ---------------------------------------------------------------------------
+# every emission across the scenario battery is in-vocabulary
+# ---------------------------------------------------------------------------
+
+def preempt_scenario():
+    """A malleable victim at min size is requeued for a max-priority
+    head — the §4.3 ``head-reservation-slip`` path end to end."""
+    apps = {
+        "vic": AppModel("vic", iterations=1000, t1_iter_s=8.0,
+                        serial_frac=0.0, data_bytes=1 << 20, min_nodes=8,
+                        max_nodes=8, preferred=None, check_period_s=15.0),
+        "big": AppModel("big", iterations=100, t1_iter_s=16.0,
+                        serial_frac=0.0, data_bytes=0, min_nodes=16,
+                        max_nodes=16, preferred=None, check_period_s=0.0),
+    }
+    victim = Job(job_id=0, app="vic", submit_time=0.0, work=1000.0,
+                 min_nodes=8, max_nodes=8, preferred=None, malleable=True,
+                 check_period_s=15.0, requested_nodes=8,
+                 data_bytes=1 << 20)
+    head = Job(job_id=1, app="big", submit_time=20.0, work=100.0,
+               min_nodes=16, max_nodes=16, preferred=None, malleable=False,
+               requested_nodes=16)
+    head.priority_boost = MAX_PRIORITY
+    cfg = SimConfig(num_nodes=16, flexible=True, checkpoint_period_s=0.0,
+                    sched=SchedulerConfig(policy="preempt",
+                                          preempt_grace_s=5.0,
+                                          preempt_requeue=True))
+    sim = ClusterSimulator([victim, head], cfg)
+    sim.apps = apps
+    return sim
+
+
+def straggler_scenario():
+    """One malleable job with healthy free nodes available — the scan
+    must swap the slow slice out (``slice-migration``)."""
+    job = Job(job_id=0, app="cg", submit_time=0.0, work=600.0,
+              min_nodes=4, max_nodes=4, preferred=None, malleable=False,
+              requested_nodes=4, data_bytes=1 << 20)
+    cfg = SimConfig(num_nodes=8, flexible=False, checkpoint_period_s=0.0,
+                    stragglers=((30.0, 0, 4.0),))
+    return ClusterSimulator([job], cfg)
+
+
+def power_scenario():
+    """CLUES power cycling: parked after the idle dwell, booted back on
+    demand (``power-off`` / ``power-on``)."""
+    a = Job(job_id=0, app="cg", submit_time=0.0, work=50.0, min_nodes=1,
+            max_nodes=1, preferred=None, requested_nodes=1)
+    b = Job(job_id=1, app="cg", submit_time=60.0, work=10.0, min_nodes=3,
+            max_nodes=3, preferred=None, requested_nodes=3)
+    cfg = SimConfig(num_nodes=4, flexible=False, checkpoint_period_s=0.0,
+                    capacity=CapacityConfig(enabled=True,
+                                            idle_power_off_s=30.0,
+                                            min_free=1,
+                                            power_up_delay_s=10.0))
+    return ClusterSimulator([a, b], cfg)
+
+
+def evolving_scenario():
+    job, apps = test_evolving.two_phase_job()
+    cfg = SimConfig(num_nodes=8, flexible=True, checkpoint_period_s=0.0)
+    return ClusterSimulator([job], cfg, apps=apps)
+
+
+def async_scenario():
+    jobs = make_workload(12, seed=7)
+    cfg = SimConfig(num_nodes=16, flexible=True, seed=7,
+                    scheduling="async", expand_timeout_s=30.0)
+    return ClusterSimulator(jobs, cfg)
+
+
+SCENARIOS = {
+    "engine": test_engine_determinism.scenario,   # failures + stragglers
+    "churn": test_capacity.churn_scenario,        # joins/drains
+    "serving": test_serving_rms.serving_scenario, # SLO negotiation
+    "preempt": preempt_scenario,                  # head-reservation slips
+    "straggler": straggler_scenario,              # slice migration
+    "power": power_scenario,                      # CLUES power cycling
+    "evolving": evolving_scenario,                # phase boundaries
+    "async": async_scenario,                      # stale grants/timeouts
+}
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_every_emitted_reason_is_in_vocabulary(name):
+    rep = SCENARIOS[name]().run()
+    assert rep.actions, f"{name}: scenario emitted no actions"
+    bad = sorted({a.reason for a in rep.actions
+                  if not is_known_reason(a.reason)})
+    assert not bad, f"{name}: out-of-vocabulary reasons {bad}"
+
+
+def test_battery_exercises_the_vocabulary_families():
+    """The battery must stay event-rich: one representative code per
+    emission family has to actually appear, or the closed-vocabulary
+    test above degrades to vacuity."""
+    seen = set()
+    for build in SCENARIOS.values():
+        rep = build().run()
+        seen |= {reason_code(a.reason) for a in rep.actions}
+    required = {
+        "toward-preferred",            # DMR policy decisions
+        "slo-expand",                  # serving SLO band
+        "node-failed",                 # faults
+        "slice-migration",             # stragglers
+        "node-join", "drain-vacate",   # capacity churn
+        "power-off",                   # power manager
+        "phase-entered",               # EVOLVING phases
+        "head-reservation-slip",       # preemption
+    }
+    missing = required - seen
+    assert not missing, f"battery no longer emits {sorted(missing)}"
+    assert seen <= REASON_CODES
